@@ -1,0 +1,91 @@
+"""Roofline aggregation: read artifacts/dryrun/*.json (written by
+launch/dryrun.py) and print/write the §Roofline table — per (arch × shape
+× mesh): three roofline terms in seconds, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs, and the roofline fraction
+(compute_term / max(all terms) — the score §Perf drives up).
+
+  PYTHONPATH=src python -m benchmarks.roofline [--mesh single|multi|both]
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def load_records(mesh: str = "both", include_opt: bool = True):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ART, "dryrun", "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh != "both" and r.get("mesh") != mesh:
+            continue
+        if not include_opt and r.get("optimized"):
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_row(r) -> list:
+    if r.get("skipped"):
+        return [r["arch"], r["shape"], r["mesh"], "SKIP", "", "", "", "",
+                "", r["reason"][:40]]
+    ro = r["roofline"]
+    frac = ro["compute_s"] / max(ro["compute_s"], ro["memory_s"],
+                                 ro["collective_s"])
+    return [r["arch"], r["shape"], r["mesh"],
+            ("opt" if r.get("optimized") else "base"),
+            f"{ro['compute_s']:.4f}", f"{ro['memory_s']:.4f}",
+            f"{ro['collective_s']:.4f}",
+            ro["dominant"].replace("_s", ""),
+            f"{ro['useful_flops_ratio']:.2f}", f"{frac:.3f}"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    args = ap.parse_args()
+    recs = load_records(args.mesh)
+    header = ["arch", "shape", "mesh", "plan", "compute_s", "memory_s",
+              "collective_s", "dominant", "useful_ratio",
+              "roofline_fraction"]
+    rows = [fmt_row(r) for r in recs]
+    widths = [max(len(str(x)) for x in [h] + [row[i] for row in rows])
+              for i, h in enumerate(header)]
+    print("  ".join(h.ljust(w) for h, w in zip(header, widths)))
+    for row in rows:
+        print("  ".join(str(x).ljust(w) for x, w in zip(row, widths)))
+
+    os.makedirs(os.path.join(ART, "bench"), exist_ok=True)
+    with open(os.path.join(ART, "bench", "roofline.csv"), "w") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+
+    live = [r for r in recs if not r.get("skipped")]
+    if live:
+        worst = min(live, key=lambda r: r["roofline"]["compute_s"] /
+                    max(r["roofline"].values() if False else
+                        [r["roofline"]["compute_s"],
+                         r["roofline"]["memory_s"],
+                         r["roofline"]["collective_s"]]))
+        coll = max(live, key=lambda r: r["roofline"]["collective_s"] /
+                   max(r["roofline"]["compute_s"],
+                       r["roofline"]["memory_s"], 1e-12))
+        print(f"\nworst roofline fraction: {worst['arch']} × "
+              f"{worst['shape']} ({worst['mesh']})")
+        print(f"most collective-bound:  {coll['arch']} × "
+              f"{coll['shape']} ({coll['mesh']})")
+
+
+if __name__ == "__main__":
+    main()

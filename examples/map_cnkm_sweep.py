@@ -1,0 +1,27 @@
+"""Paper-evaluation sweep: all seven CnKm kernels x {BandMap, BusMap} x
+{no GRF, GRF=8}; prints the Fig.5-style table (II ratios) and the
+routing-PE comparison (§IV-B).
+
+  PYTHONPATH=src python examples/map_cnkm_sweep.py [--quick]
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import PAPER_KERNELS, cnkm_name, make_cnkm, map_dfg  # noqa: E402
+from repro.core.cgra import CGRAConfig                    # noqa: E402
+
+quick = "--quick" in sys.argv
+kw = dict(mis_restarts=4, mis_iters=8000, max_ii=8) if quick else {}
+
+print(f"{'kernel':8s} {'grf':4s} {'MII':4s} "
+      f"{'Band II':8s} {'Bus II':7s} {'Band rPE':9s} {'Bus rPE':8s}")
+for grf in (0, 8):
+    cgra = CGRAConfig(grf=grf)
+    for n, m in PAPER_KERNELS:
+        rb = map_dfg(make_cnkm(n, m), cgra, mode="bandmap", **kw)
+        ru = map_dfg(make_cnkm(n, m), cgra, mode="busmap", **kw)
+        print(f"{cnkm_name(n, m):8s} {grf:<4d} {rb.mii:<4d} "
+              f"{rb.ii:<8d} {ru.ii:<7d} {rb.n_routing_pes:<9d} "
+              f"{ru.n_routing_pes:<8d}")

@@ -1,0 +1,31 @@
+"""Beyond-paper example: the bandwidth-allocating planner applied to the
+TPU mesh — per-arch transfer DFG, reuse degrees, and the multicast/relay
+allocation (DESIGN.md §2 maps each column back to the CGRA concept).
+
+  PYTHONPATH=src python examples/planner_report.py [arch] [shape]
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import SHAPES, get_config              # noqa: E402
+from repro.core import planner as planner_mod             # noqa: E402
+
+
+class Mesh:
+    shape = {"pod": 2, "data": 16, "model": 16}
+
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "mixtral-8x7b"
+shape = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+cell = SHAPES[shape]
+cfg = get_config(arch)
+for optimized in (False, True):
+    plan = planner_mod.plan(cfg, cell.kind, cell.seq_len,
+                            cell.global_batch, Mesh(), arch=arch,
+                            shape=shape, optimized=optimized)
+    print(("OPTIMIZED" if optimized else "BASELINE") + " " + "=" * 60)
+    print(plan.summary())
+    print(f"total predicted collective bytes/step: "
+          f"{plan.collective_bytes / 2**30:.2f} GiB\n")

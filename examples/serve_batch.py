@@ -1,0 +1,15 @@
+"""Batched serving example: wave-scheduled batched decode of a smoke-size
+gemma3 across 8 requests (prefill + lockstep decode ticks).
+
+  PYTHONPATH=src python examples/serve_batch.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main                       # noqa: E402
+
+if __name__ == "__main__":
+    main(["--arch", "gemma3-4b", "--requests", "8", "--gen", "24",
+          "--slots", "4", "--prompt-len", "12"])

@@ -1,0 +1,141 @@
+"""Step-scoped checkpoint/restore for sharded training state.
+
+Format: one directory per step, one ``.npz`` shard per host (each host
+writes only the leaves it owns — addressable shards of globally-sharded
+arrays), plus a small JSON manifest with the pytree structure, step, and
+data-pipeline cursor.  Writes are atomic (tmp dir + rename) so a failure
+mid-write never corrupts the latest checkpoint; `CheckpointManager`
+retains the newest K checkpoints and garbage-collects the rest.
+
+On restore the manifest's tree structure is validated against the
+expected pytree, and each leaf is device_put against the *current* mesh's
+sharding — which is what makes elastic restarts (restore onto a smaller
+degraded mesh; see runtime/elastic.py) work: the on-disk format is
+mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for kp, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in kp)
+        out[key] = leaf
+    return out
+
+
+def save_checkpoint(path: str, state, step: int, *, host_id: int = 0,
+                    extra: dict | None = None) -> str:
+    """Atomically write ``state`` under ``path/step_<step>``."""
+    final = os.path.join(path, f"step_{step:08d}")
+    tmp = final + f".tmp{host_id}"
+    os.makedirs(tmp, exist_ok=True)
+    leaves = _flatten_with_paths(state)
+    arrays = {k: np.asarray(v) for k, v in leaves.items()}
+    np.savez(os.path.join(tmp, f"shard_{host_id}.npz"), **arrays)
+    if host_id == 0:
+        manifest = {
+            "step": step, "time": time.time(),
+            "keys": sorted(arrays.keys()),
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+    os.replace(tmp, final) if not os.path.exists(final) else \
+        _merge_tmp(tmp, final)
+    return final
+
+
+def _merge_tmp(tmp: str, final: str) -> None:
+    for f in os.listdir(tmp):
+        os.replace(os.path.join(tmp, f), os.path.join(final, f))
+    shutil.rmtree(tmp, ignore_errors=True)
+
+
+def latest_step(path: str) -> int | None:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(path)
+             if d.startswith("step_") and not d.endswith("tmp0")]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(path: str, like, step: int | None = None,
+                    *, shardings=None):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``: optional matching pytree of
+    NamedShardings for the *current* mesh."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {path}")
+    d = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays: dict[str, np.ndarray] = {}
+    for f_ in sorted(os.listdir(d)):
+        if f_.startswith("shard_") and f_.endswith(".npz"):
+            with np.load(os.path.join(d, f_)) as z:
+                for k in z.files:
+                    arrays[k] = z[k]
+    want = _flatten_with_paths(like)
+    missing = set(want) - set(arrays)
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]}")
+
+    flat_sh = _flatten_with_paths(shardings) if shardings is not None \
+        else {}
+    restored = {}
+    for k, spec in want.items():
+        arr = arrays[k]
+        if tuple(arr.shape) != tuple(spec.shape):
+            raise ValueError(f"shape mismatch for {k}: "
+                             f"{arr.shape} vs {spec.shape}")
+        if k in flat_sh:
+            restored[k] = jax.device_put(arr, flat_sh[k])
+        else:
+            restored[k] = arr
+    # unflatten back into the reference structure
+    treedef = jax.tree_util.tree_structure(like)
+    keys = list(_flatten_with_paths(like).keys())
+    leaves = [restored[k] for k in keys]
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest
+
+
+class CheckpointManager:
+    """Retention + cadence policy around save/load."""
+
+    def __init__(self, path: str, *, keep: int = 3, every: int = 100):
+        self.path = path
+        self.keep = keep
+        self.every = every
+
+    def maybe_save(self, state, step: int, **kw) -> str | None:
+        if step % self.every:
+            return None
+        out = save_checkpoint(self.path, state, step, **kw)
+        self._gc()
+        return out
+
+    def _gc(self) -> None:
+        if not os.path.isdir(self.path):
+            return
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.path)
+                       if d.startswith("step_") and "tmp" not in d)
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.path, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, like, **kw):
+        return load_checkpoint(self.path, like, **kw)

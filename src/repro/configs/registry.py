@@ -1,0 +1,104 @@
+"""Architecture & shape-cell registry.
+
+Every assigned architecture is a module ``configs/<id>.py`` exposing
+``CONFIG`` (the exact published configuration) and ``SMOKE_CONFIG`` (a
+reduced same-family config for CPU smoke tests).  ``input_specs`` builds
+the ShapeDtypeStruct stand-ins the dry-run lowers against — weak-type
+correct, shardable, no device allocation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import cache_specs
+from repro.models.transformer import ModelConfig
+
+ARCHS: tuple[str, ...] = (
+    "mixtral-8x7b", "deepseek-v2-lite-16b", "gemma3-4b", "starcoder2-7b",
+    "glm4-9b", "qwen1.5-4b", "whisper-tiny", "mamba2-2.7b", "qwen2-vl-72b",
+    "zamba2-1.2b",
+)
+
+# Archs eligible for the long_500k cell (sub-quadratic attention paths:
+# SWA everywhere, 5:1 local:global, SSM, hybrid).  Pure full-attention
+# archs skip it (assignment rule; see DESIGN.md §5).
+LONG_OK: frozenset = frozenset(
+    {"mixtral-8x7b", "gemma3-4b", "mamba2-2.7b", "zamba2-1.2b"})
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+
+def _module(arch: str):
+    return importlib.import_module(
+        f"repro.configs.{arch.replace('-', '_').replace('.', '_')}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).SMOKE_CONFIG
+
+
+def applicable(arch: str, shape: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped) for an (arch × shape) cell."""
+    if shape == "long_500k" and arch not in LONG_OK:
+        return False, ("pure full-attention arch: 524k decode needs a "
+                       "sub-quadratic path (assignment skip rule)")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell,
+                cache_dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train:   {batch: {tokens, labels[, vision_embeds, audio_embeds]}}
+    prefill: {batch: {tokens[, ...]}, cache}
+    decode:  {batch: {tokens (B,1)}, cache}
+    """
+    b, s = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    sd = jax.ShapeDtypeStruct
+
+    def batch_specs(seq_tokens: int, with_labels: bool):
+        bt: dict = {"tokens": sd((b, seq_tokens), i32)}
+        if with_labels:
+            bt["labels"] = sd((b, seq_tokens), i32)
+        if cfg.n_vision_tokens:
+            bt["vision_embeds"] = sd(
+                (b, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "encdec":
+            bt["audio_embeds"] = sd((b, cfg.enc_seq, cfg.d_model),
+                                    jnp.bfloat16)
+        return bt
+
+    if cell.kind == "train":
+        text = s - cfg.n_vision_tokens if cfg.n_vision_tokens else s
+        return {"batch": batch_specs(text, True)}
+    if cell.kind == "prefill":
+        text = s - cfg.n_vision_tokens if cfg.n_vision_tokens else s
+        return {"batch": batch_specs(text, False),
+                "cache": cache_specs(cfg, b, s, cache_dtype)}
+    # decode: one new token against a seq_len-deep cache
+    bt = {"tokens": sd((b, 1), i32)}
+    return {"batch": bt, "cache": cache_specs(cfg, b, s, cache_dtype)}

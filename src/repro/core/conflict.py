@@ -1,0 +1,290 @@
+"""Phase 3a: the mixed tuple/quadruple resource-occupation conflict graph
+CG(V_C, E_C) (paper §III-B).
+
+Vertices are *placement candidates*:
+
+- tuples  (port_n^t, op_s^t)  for virtual ops: every (VIO, IPORT) and
+  (VOO, OPORT) combination at the op's scheduled modulo slot;
+- quadruples (pe_{i,j}^t, op_r^t, bus_{i,x}^t, bus_{j,y}^t) for computing and
+  routing ops: every PE position (and, for routing ops, the bus scope the op
+  re-drives: its row or its column).
+
+Edges = resource-occupation conflicts, the paper's three rules:
+
+1. tuple–tuple: two virtual ops on one port at the same modulo time, or one
+   op on two ports (we encode the latter as the universal "same op twice"
+   rule, which also makes MIS pick exactly one candidate per op; VIO clones
+   created by bandwidth allocation are distinct ops, so multi-port binding
+   stays conflict-free — exactly Fig. 2(c)(e));
+2. tuple–quadruple: the port's hardwired bus is simultaneously re-driven for
+   bus routing by a routing op, or the PE consuming (producing) the tuple's
+   datum is not attached to a bus the port drives (row mismatch for VIOs,
+   column mismatch for VOOs);
+3. quadruple–quadruple: two ops on one PE instance, one op on two PEs, bus
+   driver clashes, or an unroutable dependency (producer/consumer neither
+   co-located nor sharing a row/column).
+
+Flexible bus-index assignment (which of the two row/column buses carries a
+PE→PE transfer, and in which cycle) is resolved after MIS by the validator
+(`validate.py`) — a pairwise conflict graph cannot express those capacity-2
+constraints exactly; the paper's phase-4 retry loop covers the same gap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .cgra import CGRAConfig
+from .dfg import OpKind
+from .schedule import ScheduledDFG
+from .tec import COL, ROW
+
+TIN, TOUT, QUAD = "tin", "tout", "quad"
+
+
+@dataclasses.dataclass(frozen=True)
+class Vertex:
+    idx: int
+    op: int
+    kind: str                      # tin | tout | quad
+    t: int                         # scheduled time
+    m: int                         # modulo slot
+    port: int = -1                 # tin: row; tout: col
+    mode: str = ""                 # tin: 'bus' | 'grf'
+    pe: tuple[int, int] = (-1, -1)
+    drive: tuple[str, int] | None = None  # routing ops: (ROW,r) or (COL,c)
+
+
+@dataclasses.dataclass
+class ConflictGraph:
+    vertices: list[Vertex]
+    adj: np.ndarray                # bool [n, n]
+    op_vertices: dict[int, list[int]]
+    n_ops: int
+
+    @property
+    def n(self) -> int:
+        return len(self.vertices)
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.adj.sum()) // 2
+
+
+def _occupancy(v: Vertex, ii: int) -> list[tuple]:
+    """Unconditional resource instances occupied by a candidate."""
+    occ: list[tuple] = []
+    if v.kind == TIN:
+        occ.append(("iport", v.port, v.m))
+        if v.mode == "bus":
+            # IPORT_r drives IBUS_r = (ROW, r, 0) at the delivery slot.
+            occ.append(("bus", ROW, v.port, 0, v.m))
+    elif v.kind == TOUT:
+        occ.append(("oport", v.port, v.m))
+        # The export drive occupies OBUS_c = (COL, c, 0) at the VOO's slot.
+        occ.append(("bus", COL, v.port, 0, v.m))
+    else:
+        occ.append(("pe", v.pe, v.m))
+    return occ
+
+
+def _dep_ok(prod: Vertex, cons: Vertex) -> bool:
+    """Relational realizability of DFG edge prod.op -> cons.op under the two
+    placements (single-hop; multi-hop paths exist only through explicit
+    routing ops)."""
+    if prod.kind == TIN:
+        if prod.mode == "grf":
+            return True  # GRF is readable by all PEs
+        # Bus delivery: the consumer PE must sit on the port's row.
+        return cons.pe[0] == prod.port
+    if cons.kind == TOUT:
+        # Producer drives OBUS_c: must sit on the OPORT's column.
+        return prod.pe[1] == cons.port
+    # quad -> quad
+    if prod.drive is not None:
+        scope, idx = prod.drive
+        if scope == ROW:
+            return cons.pe == prod.pe or cons.pe[0] == idx
+        return cons.pe == prod.pe or cons.pe[1] == idx
+    # plain compute producer: same PE (LRF), same row or same column (bus).
+    return (cons.pe == prod.pe or cons.pe[0] == prod.pe[0]
+            or cons.pe[1] == prod.pe[1])
+
+
+def build_conflict_graph(sched: ScheduledDFG, cgra: CGRAConfig,
+                         use_kernel: bool = False) -> ConflictGraph:
+    dfg, ii = sched.dfg, sched.ii
+    vertices: list[Vertex] = []
+    op_vertices: dict[int, list[int]] = {}
+
+    def add(v: Vertex) -> None:
+        op_vertices.setdefault(v.op, []).append(v.idx)
+        vertices.append(v)
+
+    for oid, op in dfg.ops.items():
+        t = sched.time[oid]
+        m = t % ii
+        if op.kind == OpKind.VIN:
+            mode = sched.delivery.get(oid, "bus")
+            for r in range(cgra.rows):
+                add(Vertex(len(vertices), oid, TIN, t, m, port=r, mode=mode))
+        elif op.kind == OpKind.VOUT:
+            for c in range(cgra.cols):
+                add(Vertex(len(vertices), oid, TOUT, t, m, port=c))
+        elif op.kind == OpKind.ROUTE:
+            for r in range(cgra.rows):
+                for c in range(cgra.cols):
+                    add(Vertex(len(vertices), oid, QUAD, t, m, pe=(r, c),
+                               drive=(ROW, r)))
+                    add(Vertex(len(vertices), oid, QUAD, t, m, pe=(r, c),
+                               drive=(COL, c)))
+        else:
+            for r in range(cgra.rows):
+                for c in range(cgra.cols):
+                    add(Vertex(len(vertices), oid, QUAD, t, m, pe=(r, c)))
+
+    n = len(vertices)
+    # Dense part (per-op cliques + occupancy clashes).  Host default is
+    # the sparse group-loop formulation (it touches only actual
+    # conflicts, which beats materialising n² at every graph size we
+    # measured — artifacts/bench/conflict_kernel.csv); the tiled
+    # conflict-matrix kernel (kernels/conflict_matrix, Pallas) is the
+    # TPU-offload formulation of the same rules, proven equal in
+    # tests/test_bandmap_core.py and test_kernels.py.
+    if use_kernel:
+        from repro.kernels.conflict_matrix.ops import conflict_matrix
+        adj = conflict_matrix(vertices)
+    else:
+        adj = dense_conflicts_python(vertices, op_vertices, ii)
+
+    def connect(i: int, j: int) -> None:
+        adj[i, j] = True
+        adj[j, i] = True
+
+    # Routing ops re-driving IBUS_r clash with any port tuple on IBUS_r at
+    # the same slot (edge rule 2, first clause).  A route with drive (ROW, r)
+    # *may* use either row bus; only the pairing with (ROW, r, 0) while the
+    # port tuple holds it is forbidden when the route's row routing bus is
+    # also taken — that capacity split is validated post-MIS.  Here we only
+    # forbid the guaranteed clash: two routing ops driving the same scope at
+    # the same slot PLUS a port tuple would exceed the two buses; pairwise we
+    # encode the port-vs-route clash only when both demand the same single
+    # remaining bus, which cannot be decided pairwise — so it is left to the
+    # validator by design.
+
+    # Dependency realizability (rules 2b and 3b).
+    dep_pairs = {(e.src, e.dst) for e in dfg.edges}
+    for src, dst in dep_pairs:
+        for i in op_vertices[src]:
+            vi = vertices[i]
+            for j in op_vertices[dst]:
+                vj = vertices[j]
+                if not _dep_ok(vi, vj):
+                    connect(i, j)
+
+    return ConflictGraph(vertices, adj, op_vertices, len(dfg.ops))
+
+
+def dense_conflicts_python(vertices, op_vertices, ii: int) -> np.ndarray:
+    """Reference python-loop formulation of the dense conflict rules
+    (per-op cliques + occupancy) — oracle for the kernel equivalence
+    test; build_conflict_graph uses the vectorised kernel path."""
+    n = len(vertices)
+    adj = np.zeros((n, n), dtype=bool)
+
+    def connect(i, j):
+        adj[i, j] = True
+        adj[j, i] = True
+
+    for ids in op_vertices.values():
+        for a in range(len(ids)):
+            for b in range(a + 1, len(ids)):
+                connect(ids[a], ids[b])
+    by_res: dict[tuple, list[int]] = {}
+    for v in vertices:
+        for res in _occupancy(v, ii):
+            by_res.setdefault(res, []).append(v.idx)
+    for ids in by_res.values():
+        for a in range(len(ids)):
+            va = vertices[ids[a]]
+            for b in range(a + 1, len(ids)):
+                vb = vertices[ids[b]]
+                if va.op != vb.op:
+                    connect(ids[a], ids[b])
+    return adj
+
+
+def constructive_init(cg: ConflictGraph, sched: ScheduledDFG,
+                      cgra: CGRAConfig, seed: int = 0) -> np.ndarray:
+    """Structure-aware greedy placement used to warm-start SBTS.
+
+    Ops are placed in scheduled-time order (VIOs before same-time compute).
+    Quad candidates are scored by affinity to already-placed predecessors
+    AND successors: same PE (LRF forward) > NSEW neighbour (dedicated link)
+    > same column > same row (bus hop, capacity-limited) > disconnected.
+    VIO rows are scored by how well their consumers can extend the placed
+    chain predecessors (adjacent rows preferred).  Only conflict-free picks
+    are kept, so the result is an independent set SBTS can repair/extend.
+    """
+    rng = np.random.default_rng(seed)
+    dfg = sched.dfg
+    in_s = np.zeros(cg.n, dtype=bool)
+    conf = np.zeros(cg.n, dtype=np.int64)
+    placed: dict[int, Vertex] = {}
+
+    def pe_affinity(v_pe, o_pe) -> float:
+        if v_pe == o_pe:
+            return 0.0
+        dr, dc = abs(v_pe[0] - o_pe[0]), abs(v_pe[1] - o_pe[1])
+        if dr + dc == 1:
+            return 0.5                       # neighbour link, bus-free
+        if dc == 0:
+            return 1.0                       # column bus
+        if dr == 0:
+            return 2.0                       # row bus
+        return 4.0
+
+    def bias_for(oid: int):
+        nbrs = [placed[p] for p in
+                (dfg.predecessors(oid) + dfg.successors(oid)) if p in placed]
+        quads = [p for p in nbrs if p.kind == QUAD]
+        kind = dfg.ops[oid].kind
+
+        def bias(v: Vertex) -> float:
+            if v.kind == TIN:
+                # Row scored by adjacency of the VIO's consumers' chain
+                # predecessors: a consumer extending a chain at row r wants
+                # delivery on r (same PE/LRF) or r±1 (neighbour link).
+                score = 0.0
+                for c in dfg.successors(oid):
+                    best = 0.5
+                    for p in dfg.predecessors(c):
+                        if p != oid and p in placed and \
+                                placed[p].kind == QUAD:
+                            d = abs(placed[p].pe[0] - v.port)
+                            best = min(best, 0.0 if d <= 1 else float(d))
+                    score += best
+                return score
+            if v.kind == TOUT:
+                # Column forced to the producer by _dep_ok; neutral here.
+                return 0.0
+            if not quads:
+                return 0.0
+            return sum(pe_affinity(v.pe, p.pe) for p in quads) / len(quads)
+        return bias
+
+    order = sorted(dfg.ops, key=lambda o: (sched.time[o],
+                                           dfg.ops[o].kind != OpKind.VIN))
+    for oid in order:
+        cands = [i for i in cg.op_vertices[oid] if conf[i] == 0]
+        if not cands:
+            continue
+        bias = bias_for(oid)
+        scored = [bias(cg.vertices[i]) + 1e-3 * rng.random() for i in cands]
+        best = cands[int(np.argmin(scored))]
+        in_s[best] = True
+        conf += cg.adj[best]
+        placed[oid] = cg.vertices[best]
+    return in_s

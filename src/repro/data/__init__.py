@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, SyntheticLMData, make_pipeline  # noqa: F401

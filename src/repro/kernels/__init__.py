@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the framework's compute hot spots, each with
+ops.py (jit'd dispatch wrapper) and ref.py (pure-jnp oracle), validated in
+interpret mode on CPU:
+
+- flash_attention/  block-tiled online-softmax attention
+                    (GQA, causal, sliding window, decode offsets)
+- ssd/              Mamba2 SSD chunked scan with VMEM state carry
+- conflict_matrix/  tiled construction of the paper's dense conflict
+                    rules (TPU-offload form of core/conflict.py)
+"""

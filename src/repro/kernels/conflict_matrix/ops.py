@@ -1,0 +1,22 @@
+"""Public conflict-matrix entrypoint: numpy-vectorised reference by
+default (host-side mapping pipeline), Pallas kernel for TPU runs."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import ref
+
+
+def conflict_matrix(vertices, *, use_pallas: bool = False,
+                    interpret: bool = False) -> np.ndarray:
+    """core.conflict.Vertex list -> (n, n) bool adjacency of the
+    occupancy/clique rules (dense part; dependency edges added by the
+    caller)."""
+    feat = ref.encode(vertices)
+    if use_pallas:
+        from . import kernel
+        adj = np.asarray(kernel.conflict_matrix_pallas(
+            feat, interpret=interpret))
+        return adj.astype(bool)
+    return ref.conflict_matrix_ref(feat)

@@ -1,0 +1,73 @@
+"""Oracle for the conflict-matrix construction kernel — the O(|V_C|²) hot
+spot of the paper's own pipeline (phase 3a).
+
+A candidate vertex is encoded as 8 int32 features (see ``encode`` /
+core/conflict.py):
+
+  kind   0=TIN 1=TOUT 2=QUAD
+  op     op id (clique rule: one candidate per op)
+  m      modulo slot
+  port   tin: IPORT row / tout: OPORT col / quad: -1
+  pe_r, pe_c                     (quad only, else -1)
+  mode   tin: 0 bus, 1 grf       (else -1)
+  drive  quad routing: 0 none, 1 row, 2 col
+
+Pairwise conflict (the dense occupancy/clique part — dependency-edge
+realizability is sparse and handled host-side):
+
+  same_op:    op_i == op_j                                   (i != j)
+  iport:      both TIN  & port equal & m equal
+  oport:      both TOUT & port equal & m equal
+  pe:         both QUAD & pe equal   & m equal
+
+Vectorised numpy here; the Pallas kernel tiles the same predicate over
+(block × block) int32 tiles.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+TIN, TOUT, QUAD = 0, 1, 2
+N_FEATURES = 8
+
+
+def encode(vertices) -> np.ndarray:
+    """core.conflict.Vertex list -> (n, 8) int32 feature matrix."""
+    from repro.core.conflict import QUAD as QS
+    from repro.core.conflict import TIN as TS
+    from repro.core.conflict import TOUT as OS
+    from repro.core.tec import ROW
+    kind_map = {TS: TIN, OS: TOUT, QS: QUAD}
+    out = np.full((len(vertices), N_FEATURES), -1, np.int32)
+    for i, v in enumerate(vertices):
+        drive = 0
+        if v.drive is not None:
+            drive = 1 if v.drive[0] == ROW else 2
+        out[i] = (kind_map[v.kind], v.op, v.m, v.port,
+                  v.pe[0], v.pe[1],
+                  {"": -1, "bus": 0, "grf": 1}.get(v.mode, -1), drive)
+    return out
+
+
+def conflict_matrix_ref(feat: np.ndarray) -> np.ndarray:
+    """(n, 8) int32 -> (n, n) bool adjacency (occupancy + clique rules)."""
+    kind = feat[:, 0]
+    op = feat[:, 1]
+    m = feat[:, 2]
+    port = feat[:, 3]
+    pe_r, pe_c = feat[:, 4], feat[:, 5]
+
+    same_op = op[:, None] == op[None, :]
+    same_m = m[:, None] == m[None, :]
+    both = lambda k: (kind[:, None] == k) & (kind[None, :] == k)  # noqa
+    same_port = port[:, None] == port[None, :]
+    same_pe = (pe_r[:, None] == pe_r[None, :]) & \
+        (pe_c[:, None] == pe_c[None, :])
+
+    adj = same_op.copy()
+    adj |= both(TIN) & same_port & same_m
+    adj |= both(TOUT) & same_port & same_m
+    adj |= both(QUAD) & same_pe & same_m
+    np.fill_diagonal(adj, False)
+    return adj

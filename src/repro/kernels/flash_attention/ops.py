@@ -1,0 +1,23 @@
+"""Public flash-attention entrypoint with backend dispatch: Pallas TPU
+kernel when requested (real-TPU runs / interpret-mode tests), the chunked
+pure-jnp reference otherwise (CPU, dry-run lowering)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from . import ref
+
+
+@partial(jax.jit, static_argnames=("block_k", "use_pallas", "interpret"))
+def flash_attention(q, k, v, *, q_offset=0, window=None, block_k: int = 512,
+                    use_pallas: bool = False, interpret: bool = False):
+    if use_pallas:
+        from . import kernel
+        return kernel.flash_attention_pallas(
+            q, k, v, q_offset=q_offset, window=window, block_k=block_k,
+            interpret=interpret)
+    return ref.flash_attention_ref(q, k, v, q_offset=q_offset,
+                                   window=window, block_k=block_k)

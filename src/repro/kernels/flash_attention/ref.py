@@ -1,0 +1,72 @@
+"""Pure-jnp chunked flash attention (online softmax) — the oracle for the
+Pallas kernel and the default long-sequence path on all backends.
+
+Memory O(S_q · block_k) instead of O(S_q · S_k): a `lax.scan` over KV
+blocks carries running (max, sum, acc) per query — numerically identical
+(up to fp assoc.) to full softmax attention.
+
+Supports GQA head broadcasting, causal masking with a query offset (decode
+against a long cache), and dynamic sliding windows (traced scalar; <= 0
+means full causal).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, q_offset=0, window=None,
+                        block_k: int = 512, scale: float | None = None):
+    """q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, D) -> (B, Sq, Hq, D).
+
+    q_offset: absolute position of q[0] (queries are assumed contiguous).
+    window: None | scalar (traced ok); <= 0 means full causal.
+    """
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    nb = -(-sk // block_k)
+    pad = nb * block_k - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qh = (q.astype(jnp.float32) * scale).reshape(b, sq, hkv, g, d)
+    q_pos = q_offset + jnp.arange(sq)
+
+    kb = k.reshape(b, nb, block_k, hkv, d).astype(jnp.float32)
+    vb = v.reshape(b, nb, block_k, hkv, d).astype(jnp.float32)
+
+    def body(carry, inp):
+        m, s, acc = carry                    # (B,Sq,Hkv,G), .., (..,D)
+        kblk, vblk, start = inp              # (B,L,Hkv,D)
+        k_pos = start + jnp.arange(block_k)
+        logits = jnp.einsum("bqhgd,bkhd->bqhgk", qh, kblk)   # (B,Sq,Hkv,G,L)
+        mask = q_pos[:, None] >= k_pos[None, :]              # (Sq,L)
+        mask &= k_pos[None, :] < sk                          # padding
+        if window is not None:
+            w = jnp.asarray(window)
+            win_ok = (q_pos[:, None] - k_pos[None, :]) < w
+            mask &= jnp.where(w > 0, win_ok, True)
+        logits = jnp.where(mask[None, :, None, None, :], logits, -jnp.inf)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        # guard fully-masked rows (m_new = -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(logits - m_safe[..., None])
+        p = jnp.where(mask[None, :, None, None, :], p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        s_new = s * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p, vblk)
+        return (m_new, s_new, acc_new), None
+
+    init = (jnp.full((b, sq, hkv, g), -jnp.inf, jnp.float32),
+            jnp.zeros((b, sq, hkv, g), jnp.float32),
+            jnp.zeros((b, sq, hkv, g, d), jnp.float32))
+    starts = jnp.arange(nb) * block_k
+    (m, s, acc), _ = jax.lax.scan(
+        body, init, (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), starts))
+    out = acc / jnp.maximum(s, 1e-30)[..., None]
+    return out.reshape(b, sq, hq, d).astype(q.dtype)

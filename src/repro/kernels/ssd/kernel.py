@@ -1,0 +1,119 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan (n_groups == 1).
+
+Grid (B, H/hb, nC) with the chunk dimension trailing — TPU grids iterate
+the last dimension sequentially per core, so the inter-chunk state carry
+(hb, P, N) lives in VMEM scratch across chunk steps; no HBM round-trip for
+the recurrence.  Per program:
+
+  intra:  gates[h,i,j] = (C_i·B_j) · exp(cum_h[i]-cum_h[j]) · dt_j   (i>=j)
+          y_intra[h]   = gates[h] @ x[h]                 (L×L @ L×P on MXU)
+  inter:  y_inter[h]   = (C @ state[h]^T) · exp(cum_h)   (L×N @ N×P)
+  state:  state[h]     = state[h]·exp(total_h)
+                         + ((dt·decay·B)^T @ x[h])       (N×L @ L×P)
+
+VMEM budget at L=chunk=128, hb=4, P=64, N=128:
+x/y tiles 4·128·64·4 B ≈ 128 KiB, gates 4·128·128·4 ≈ 256 KiB,
+state 4·64·128·4 ≈ 128 KiB — far under the ~16 MiB VMEM ceiling; L and hb
+are the tuning knobs.
+
+Validated in interpret mode against ref.ssd_chunked.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, y_ref, fin_ref,
+                state_ref, *, chunk: int, hb: int, p: int, n: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)             # (L, hb, P)
+    dt = dt_ref[0].astype(jnp.float32)           # (L, hb)
+    a = -jnp.exp(alog_ref[...].astype(jnp.float32))   # (hb,)
+    bm = b_ref[0, :, 0, :].astype(jnp.float32)   # (L, N)
+    cm = c_ref[0, :, 0, :].astype(jnp.float32)   # (L, N)
+
+    dta = dt * a[None, :]                        # (L, hb) log-decay
+    cum = jnp.cumsum(dta, axis=0)                # inclusive
+    total = cum[-1, :]                           # (hb,)
+
+    scores = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+
+    for h in range(hb):                          # hb is small and static
+        ss = cum[:, None, h] - cum[None, :, h]   # (L, L)
+        gates = jnp.where(tri, scores * jnp.exp(ss) * dt[None, :, h], 0.0)
+        y_intra = jax.lax.dot(gates, x[:, h, :],
+                              preferred_element_type=jnp.float32)
+        st = state_ref[h]                        # (P, N)
+        y_inter = jax.lax.dot_general(
+            cm, st, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * jnp.exp(cum[:, h:h + 1])
+        y_ref[0, :, h, :] = (y_intra + y_inter).astype(y_ref.dtype)
+
+        w = dt[:, h] * jnp.exp(total[h] - cum[:, h])          # (L,)
+        upd = jax.lax.dot_general(
+            x[:, h, :], bm * w[:, None], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)               # (P, N)
+        state_ref[h] = st * jnp.exp(total[h]) + upd
+
+    @pl.when(ci == nc - 1)
+    def _finish():
+        fin_ref[0] = state_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "head_block", "interpret"))
+def ssd_pallas(x, dt, a_log, b, c, *, chunk: int = 128,
+               head_block: int = 4, interpret: bool = False):
+    """x: (B,S,H,P); dt: (B,S,H); a_log: (H,); b, c: (B,S,1,N).
+    Returns (y: (B,S,H,P), final_state: (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    assert b.shape[2] == 1, "pallas SSD kernel supports n_groups == 1"
+    assert s % chunk == 0
+    hb = min(head_block, h)
+    assert h % hb == 0
+    nc = s // chunk
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, hb=hb, p=p, n=n)
+    y, fin = pl.pallas_call(
+        kernel,
+        grid=(bsz, h // hb, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hb, p),
+                         lambda b_, hi, ci: (b_, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, hb),
+                         lambda b_, hi, ci: (b_, ci, hi)),
+            pl.BlockSpec((hb,), lambda b_, hi, ci: (hi,)),
+            pl.BlockSpec((1, chunk, 1, n),
+                         lambda b_, hi, ci: (b_, ci, 0, 0)),
+            pl.BlockSpec((1, chunk, 1, n),
+                         lambda b_, hi, ci: (b_, ci, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, hb, p),
+                         lambda b_, hi, ci: (b_, ci, hi, 0)),
+            pl.BlockSpec((1, hb, p, n), lambda b_, hi, ci: (b_, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hb, p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a_log, b, c)
+    return y, fin

@@ -1,0 +1,24 @@
+"""Jit'd public entrypoint for the SSD scan with backend dispatch:
+Pallas TPU kernel when requested/available, pure-jnp chunked reference
+otherwise (CPU/GPU and all dry-run lowering paths).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from . import ref
+
+
+@partial(jax.jit, static_argnames=("chunk", "use_pallas", "interpret"))
+def ssd(x, dt, a_log, b, c, *, chunk: int = 64, use_pallas: bool = False,
+        interpret: bool = False):
+    """Chunked SSD scan; see ref.ssd_chunked for shapes."""
+    if use_pallas:
+        from . import kernel
+        y, state = kernel.ssd_pallas(x, dt, a_log, b, c, chunk=chunk,
+                                     interpret=interpret)
+        return y, state
+    return ref.ssd_chunked(x, dt, a_log, b, c, chunk=chunk)

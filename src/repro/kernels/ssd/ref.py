@@ -1,0 +1,128 @@
+"""Pure-jnp oracle for the Mamba2 SSD (state-space duality) chunked scan
+(arXiv:2405.21060, Algorithm "SSD").
+
+Selective state space recurrence, per head h with head dim P and state N:
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t ⊗ x_t         (P, N)
+    y_t = h_t @ C_t + D * x_t
+
+The chunked form splits the sequence into chunks of length L:
+ - intra-chunk: a (masked, decay-weighted) attention-like quadratic term,
+ - chunk states: decay-weighted sum of B⊗x within each chunk,
+ - inter-chunk: a `lax.scan`/associative-scan over per-chunk states,
+ - output: intra + C·(carried state) + skip.
+
+This file is the reference the Pallas kernel (kernel.py) is verified
+against, and the implementation used on non-TPU backends.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segsum(log_a):
+    """(..., L) -> (..., L, L) lower-triangular pairwise decay sums:
+    out[i, j] = sum_{k=j+1..i} log_a[k]  (i >= j), -inf above diagonal."""
+    length = log_a.shape[-1]
+    x = jnp.cumsum(log_a, axis=-1)
+    diff = x[..., :, None] - x[..., None, :]
+    mask = jnp.tril(jnp.ones((length, length), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_log, b, c, *, chunk: int = 64,
+                initial_state=None):
+    """Chunked SSD scan.
+
+    x:  (B, S, H, P)   inputs (already gated/conv'd)
+    dt: (B, S, H)      positive step sizes (softplus applied by caller)
+    a_log: (H,)        A = -exp(a_log)
+    b, c: (B, S, G, N) input/output projections (G groups broadcast to H)
+    Returns y: (B, S, H, P), final_state: (B, H, P, N).
+    """
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    s_orig = s
+    if s % chunk:
+        # pad with dt = 0 steps: decay exp(0·A) = 1 and zero B·x update,
+        # so both outputs and the final state are unaffected.
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+    rep = h // g
+
+    a = -jnp.exp(a_log.astype(jnp.float32))                  # (H,)
+    dta = dt.astype(jnp.float32) * a                         # (B,S,H) log-decay
+    # chunk views
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h).astype(jnp.float32)
+    dtac = dta.reshape(bsz, nc, chunk, h)
+    bc = jnp.repeat(b.reshape(bsz, nc, chunk, g, n), rep, axis=3)
+    cc = jnp.repeat(c.reshape(bsz, nc, chunk, g, n), rep, axis=3)
+
+    # ---- intra-chunk (quadratic, attention-like) -------------------------
+    ss = segsum(jnp.moveaxis(dtac, -1, -2))                  # (B,nc,H,L,L)
+    decay = jnp.exp(ss)
+    scores = jnp.einsum("bzihn,bzjhn->bzhij", cc, bc,
+                        preferred_element_type=jnp.float32)
+    dt_j = jnp.moveaxis(dtc, -1, -2)                         # (B,nc,H,L)
+    gates = scores * decay * dt_j[..., None, :]              # dt on j axis
+    y_intra = jnp.einsum("bzhij,bzjhp->bzihp", gates,
+                         xc.astype(jnp.float32))
+
+    # ---- chunk states -----------------------------------------------------
+    cum = jnp.cumsum(dtac, axis=2)                           # (B,nc,L,H)
+    total = cum[:, :, -1:, :]                                # (B,nc,1,H)
+    state_decay = jnp.exp(total - cum)                       # decay j -> end
+    sb = bc * (dtc * state_decay)[..., None]                 # weight B by dt
+    states = jnp.einsum("bzjhn,bzjhp->bzhpn", sb,
+                        xc.astype(jnp.float32))              # (B,nc,H,P,N)
+
+    # ---- inter-chunk scan --------------------------------------------------
+    chunk_decay = jnp.exp(total[:, :, 0, :])                 # (B,nc,H)
+    init = (jnp.zeros((bsz, h, p, n), jnp.float32)
+            if initial_state is None else initial_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st, dec = inp                                        # (B,H,P,N),(B,H)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                    # emit PREVIOUS
+
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)            # (B,nc,H,P,N)
+
+    # ---- inter-chunk output contribution ----------------------------------
+    in_decay = jnp.exp(cum)                                  # decay start->t
+    y_inter = jnp.einsum("bzihn,bzhpn->bzihp", cc, prev_states) \
+        * in_decay[..., None]                                # (B,nc,L,H,1)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)[:, :s_orig]
+    return y.astype(x.dtype), final
+
+
+def ssd_step(state, x_t, dt_t, a_log, b_t, c_t):
+    """Single-token recurrent update (decode path).
+
+    state: (B, H, P, N); x_t: (B, H, P); dt_t: (B, H);
+    b_t, c_t: (B, G, N).  Returns (y_t, new_state).
+    """
+    bsz, h, p = x_t.shape
+    g = b_t.shape[1]
+    rep = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    da = jnp.exp(dt_t.astype(jnp.float32) * a)               # (B,H)
+    bh = jnp.repeat(b_t, rep, axis=1).astype(jnp.float32)    # (B,H,N)
+    ch = jnp.repeat(c_t, rep, axis=1).astype(jnp.float32)
+    upd = (dt_t.astype(jnp.float32)[..., None, None]
+           * x_t.astype(jnp.float32)[..., None] * bh[..., None, :])
+    new_state = state * da[..., None, None] + upd            # (B,H,P,N)
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, ch)
+    return y.astype(x_t.dtype), new_state

@@ -1,0 +1,269 @@
+"""Multi-pod dry-run: prove the distribution config is coherent by
+lowering + compiling every (arch × shape × mesh) cell against 512
+placeholder host devices, then extract the roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b \
+      --shape train_4k --mesh single [--plan optimized] [--out artifacts/dryrun]
+
+MUST stay the first two lines: jax locks the device count on first init.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import SHAPES, applicable, get_config, input_specs  # noqa: E402
+from repro.core import planner as planner_mod  # noqa: E402
+from repro.launch import hlo_analysis          # noqa: E402
+from repro.launch import sharding as sh        # noqa: E402
+from repro.launch.mesh import make_production_mesh, mesh_device_count  # noqa: E402
+from repro.models import model as M            # noqa: E402
+from repro.models.transformer import ModelConfig  # noqa: E402
+from repro.optim import AdamW                  # noqa: E402
+
+# TPU v5e-like hardware constants (roofline denominators).
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+
+# ------------------------------------------------------------ cache axes
+def cache_axes_for_path(path: str, shape: tuple) -> tuple:
+    p = path.lower()
+    nd = len(shape)
+    if "/c_kv/" in p:
+        return ("layer", "batch", "seq", "kv_lora")
+    if "/k_pe/" in p:
+        return ("layer", "batch", "seq", None)
+    if "/conv/" in p:
+        return ("layer", "batch", None, "ssm_inner")
+    if "/ssm/" in p:
+        return ("layer", "batch", "ssm_heads", None, "ssm_state")
+    if "cross_kv" in p:
+        return ("layer", "batch", "seq", "heads", "head_dim")
+    if p.endswith("/k/") or p.endswith("/v/"):
+        return ("layer", "batch", "seq", "kv_heads", "head_dim")
+    if "/pos/" in p:
+        return ("layer",)[: nd]
+    return (None,) * nd
+
+
+def batch_axes_for_path(path: str, shape: tuple) -> tuple:
+    if "embeds" in path:
+        return ("batch", "seq", "embed")
+    return ("batch", "seq")[: len(shape)]
+
+
+def tree_shardings(tree, axes_fn, rules):
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, a: rules.sharding_for(
+            axes_fn(sh.path_str(kp), a.shape), a.shape), tree)
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE: top-k of routed experts)."""
+    n = M.count_params(cfg)
+    if cfg.family == "moe" and cfg.n_experts:
+        routed = 3 * cfg.n_experts * cfg.d_model * cfg.moe_d_ff \
+            * cfg.n_layers
+        n -= routed * (cfg.n_experts - cfg.top_k) // cfg.n_experts
+    return n
+
+
+def model_flops(cfg: ModelConfig, kind: str, tokens: int) -> float:
+    """Useful FLOPs: 6·N_active·D for training, 2·N_active·D forward."""
+    n_act = active_params(cfg)
+    return (6.0 if kind == "train" else 2.0) * n_act * tokens
+
+
+# ------------------------------------------------------------- lowering
+def build_step(cfg: ModelConfig, kind: str, rules, optimizer):
+    """Returns (fn, in_specs, in_shardings, donate) ready to jit."""
+    if kind == "train":
+        train_step = M.make_train_step(cfg, optimizer)
+
+        def fn(state, batch):
+            with sh.use_rules(rules):
+                return train_step(state, batch)
+        return fn
+    if kind == "prefill":
+        def fn(params, batch, cache):
+            with sh.use_rules(rules):
+                return M.prefill_step(cfg, params, batch, cache)
+        return fn
+
+    def fn(params, batch, cache):
+        with sh.use_rules(rules):
+            return M.serve_step(cfg, params, batch, cache)
+    return fn
+
+
+def lower_cell(arch: str, shape: str, *, multi_pod: bool,
+               optimized: bool = False, cfg: ModelConfig | None = None):
+    """Lower + compile one cell; returns the result record dict."""
+    cell = SHAPES[shape]
+    cfg = cfg or get_config(arch)
+    if optimized:
+        # Beyond-paper §Perf variant (EXPERIMENTS.md logs each knob's
+        # hypothesis → before/after): capacity MoE (active-FLOPs batched
+        # matmuls), bf16 backward cotangents, absorbed-MLA decode.
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, moe_impl="capacity", logits_dtype="bfloat16",
+            mla_absorbed=True)
+    ok, reason = applicable(arch, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape,
+                "mesh": "multi" if multi_pod else "single",
+                "skipped": True, "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_device_count(mesh)
+    plan = planner_mod.plan(cfg, cell.kind, cell.seq_len, cell.global_batch,
+                            mesh, optimized=optimized, arch=arch,
+                            shape=shape)
+    rules = sh.Rules(plan.rules, mesh)
+    specs = input_specs(cfg, cell)
+    optimizer = AdamW()
+
+    param_specs = M.param_specs(cfg)
+    p_shard = sh.params_shardings(param_specs, rules)
+    t0 = time.time()
+
+    if cell.kind == "train":
+        opt_specs = jax.eval_shape(optimizer.init, param_specs)
+        o_shard = sh.params_shardings(opt_specs, rules)
+        step_spec = jax.ShapeDtypeStruct((), jnp.int32)
+        state_specs = (param_specs, opt_specs, step_spec)
+        state_shard = (p_shard, o_shard,
+                       rules.sharding_for((), ()))
+        b_shard = tree_shardings(specs["batch"], batch_axes_for_path, rules)
+        fn = build_step(cfg, "train", rules, optimizer)
+        with mesh:
+            lowered = jax.jit(
+                fn, in_shardings=(state_shard, b_shard),
+                out_shardings=(state_shard, None),
+                donate_argnums=(0,),
+            ).lower(state_specs, specs["batch"])
+    else:
+        c_shard = tree_shardings(specs["cache"], cache_axes_for_path, rules)
+        b_shard = tree_shardings(specs["batch"], batch_axes_for_path, rules)
+        fn = build_step(cfg, cell.kind, rules, optimizer)
+        out_sh = (None, c_shard) if cell.kind == "prefill" \
+            else (None, None, c_shard)
+        with mesh:
+            lowered = jax.jit(
+                fn, in_shardings=(p_shard, b_shard, c_shard),
+                out_shardings=out_sh, donate_argnums=(2,),
+            ).lower(param_specs, specs["batch"], specs["cache"])
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    # Trip-count-corrected numerators (cost_analysis counts while bodies
+    # once; see hlo_analysis.py).  All values are per-device.
+    ana = hlo_analysis.analyze(compiled.as_text())
+
+    flops_dev = float(ana["dot_flops"])
+    bytes_dev = float(ana["hbm_bytes"])
+    coll_dev = float(ana["collective_total_bytes"])
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode"
+                                  else 1)
+    mf = model_flops(cfg, cell.kind, tokens)
+
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_dev / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    rec = {
+        "arch": arch, "shape": shape,
+        "mesh": "multi" if multi_pod else "single",
+        "optimized": optimized, "chips": chips, "skipped": False,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "per_device": {
+            "hlo_flops": flops_dev, "hlo_bytes": bytes_dev,
+            "collective_bytes": coll_dev,
+            "collective_detail": {
+                "bytes": ana["collective_bytes"],
+                "counts": ana["collective_counts"]},
+            "cost_analysis_flops_uncorrected":
+                float(cost.get("flops", 0.0)),
+            "cost_analysis_bytes_uncorrected":
+                float(cost.get("bytes accessed", 0.0)),
+        },
+        "memory_analysis": {
+            k: getattr(mem, k, None) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes",
+             "alias_size_in_bytes")} if mem is not None else None,
+        "roofline": {
+            **{k: float(v) for k, v in terms.items()},
+            "dominant": dominant,
+            "model_flops_total": mf,
+            "hlo_flops_total": flops_dev * chips,
+            "useful_flops_ratio": mf / max(flops_dev * chips, 1.0),
+            "roofline_fraction": max(terms.values()) and
+            compute_s / max(terms.values()),
+        },
+        "planner": {
+            "rules": {k: (list(v) if isinstance(v, tuple) else v)
+                      for k, v in plan.rules.items()},
+            "predicted_collective_bytes": plan.collective_bytes,
+            "transfers": [dataclasses_to_dict(t) for t in plan.transfers],
+        },
+    }
+    return rec
+
+
+def dataclasses_to_dict(t):
+    import dataclasses as dc
+    return dc.asdict(t)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--plan", default="baseline",
+                    choices=["baseline", "optimized"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    rec = lower_cell(args.arch, args.shape,
+                     multi_pod=args.mesh == "multi",
+                     optimized=args.plan == "optimized")
+    os.makedirs(args.out, exist_ok=True)
+    tag = f"{args.arch}__{args.shape}__{args.mesh}" + \
+        ("__opt" if args.plan == "optimized" else "")
+    path = os.path.join(args.out, tag + ".json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    if rec.get("skipped"):
+        print(f"SKIP {tag}: {rec['reason']}")
+    else:
+        r = rec["roofline"]
+        print(f"PASS {tag}: compile={rec['compile_s']}s "
+              f"compute={r['compute_s']:.4f}s memory={r['memory_s']:.4f}s "
+              f"collective={r['collective_s']:.4f}s dom={r['dominant']} "
+              f"useful={r['useful_flops_ratio']:.2f}")
+    return rec
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,289 @@
+"""Post-SPMD HLO analysis with while-loop trip-count correction.
+
+XLA's ``cost_analysis()`` (and any naive text scan) counts a while-loop
+body ONCE — a `lax.scan` over L layers under-reports FLOPs, HBM bytes and
+collective bytes by ~L×.  This module re-derives the three roofline
+numerators from ``compiled.as_text()``:
+
+1. split the module into computations and build a per-computation symbol
+   table (instruction name -> shape) including header parameters,
+2. build call-graph multipliers: while bodies/conds inherit
+   ``known_trip_count`` (conservative 1 when absent); fusions, reduces,
+   calls, conditionals inherit their caller's multiplier,
+3. count per computation, scaled by its multiplier:
+   - dot FLOPs        2 · numel(result) · prod(lhs contracting dims),
+   - HBM bytes        result + operand bytes per op at fusion boundaries
+                      (fusion internals stay in registers/VMEM),
+   - collective bytes result-shape bytes of all-gather / all-reduce /
+                      reduce-scatter / all-to-all / collective-permute.
+
+Exact for dot-dominated modules (transformer steps); elementwise FLOPs are
+not counted (they are VPU, not MXU work) — documented in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8,
+                "s32": 4, "u64": 8, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+                "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_RE_DEF = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+                     r"\(?(\w+)\[([\d,]*)\]")
+_RE_OPNAME = re.compile(r"\]\S*\s+([a-z][\w\-]*)\(")
+_RE_PARAM = re.compile(r"%?([\w\.\-]+):\s*\(?(\w+)\[([\d,]*)\]")
+_RE_OPERAND = re.compile(r"%([\w\.\-]+)")
+_RE_TRIP = re.compile(r"known_trip_count[^0-9]*(\d+)")
+
+
+def _nbytes(dtype: str, dims: str) -> float:
+    n = _DTYPE_BYTES.get(dtype, 4)
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return float(n)
+
+
+def _numel(dims: str) -> float:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return float(n)
+
+
+@dataclasses.dataclass
+class CompStats:
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    coll_counts: dict = dataclasses.field(
+        default_factory=lambda: {k: 0 for k in COLLECTIVES})
+    calls: list = dataclasses.field(default_factory=list)
+
+
+def _split_computations(text: str):
+    """yields (name, is_entry, header, body_lines)"""
+    comps = []
+    cur = None
+    for line in text.splitlines():
+        stripped = line.rstrip()
+        if cur is None:
+            if ") -> " in stripped and stripped.endswith("{"):
+                name = stripped.split()[1] if stripped.startswith("ENTRY") \
+                    else stripped.split()[0]
+                cur = [name.lstrip("%"), stripped.startswith("ENTRY"),
+                       stripped, []]
+        else:
+            if stripped == "}":
+                comps.append(tuple(cur))
+                cur = None
+            else:
+                cur[3].append(line)
+    if cur is not None:
+        comps.append(tuple(cur))
+    return comps
+
+
+def _analyze_comp(name: str, header: str, body: list[str],
+                  fusion_boundary: bool) -> CompStats:
+    st = CompStats()
+    shapes: dict[str, tuple[str, str]] = {}
+    for m in _RE_PARAM.finditer(header):
+        shapes[m.group(1)] = (m.group(2), m.group(3))
+
+    # pass 1: symbol table
+    parsed = []
+    for line in body:
+        md = _RE_DEF.match(line)
+        if not md:
+            continue
+        iname, rtype, rdims = md.groups()
+        shapes[iname] = (rtype, rdims)
+        mo = _RE_OPNAME.search(line)
+        op = mo.group(1) if mo else ""
+        parsed.append((iname, rtype, rdims, op, line))
+
+    # pass 2: counts
+    for iname, rtype, rdims, op, line in parsed:
+        if op == "while":
+            trip = 1
+            mt = _RE_TRIP.search(line)
+            if mt:
+                trip = int(mt.group(1))
+            for mc in re.finditer(r"(?:body|condition)=%?([\w\.\-]+)",
+                                  line):
+                st.calls.append((mc.group(1), trip))
+        else:
+            for mc in re.finditer(
+                    r"(?:calls|to_apply|true_computation|false_computation|"
+                    r"branch_computations=\{[^}]*?)=%?([\w\.\-]+)", line):
+                st.calls.append((mc.group(1), 1))
+
+        if op in COLLECTIVES:
+            st.coll_bytes[op] += _nbytes(rtype, rdims)
+            st.coll_counts[op] += 1
+
+        args = line[line.find("(", line.find(op)) :] if op else ""
+        operands = [o for o in _RE_OPERAND.findall(args) if o in shapes]
+
+        if op in ("dot", "ragged-dot") and operands:
+            lhs_t, lhs_d = shapes[operands[0]]
+            contract = 1.0
+            mcd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+            if mcd and mcd.group(1):
+                ldims = [int(d) for d in lhs_d.split(",") if d]
+                for ci in mcd.group(1).split(","):
+                    if ci and int(ci) < len(ldims):
+                        contract *= ldims[int(ci)]
+            st.dot_flops += 2.0 * _numel(rdims) * contract
+
+        if fusion_boundary:
+            # HBM traffic model (shared with the top_ops drill-down).
+            # Sliced/aliased-access ops move only the slice: XLA aliases
+            # dynamic-update-slice in place — counting the full operand
+            # would overcount a lax.scan body by ~L×.
+            _count_line(st, line, shapes)
+    return st
+
+
+def analyze(text: str) -> dict:
+    comps = _split_computations(text)
+    stats: dict[str, CompStats] = {}
+    entry = None
+    for name, is_entry, header, body in comps:
+        stats[name] = _analyze_comp(
+            name, header, body,
+            fusion_boundary=not name.startswith("fused_"))
+        if is_entry:
+            entry = name
+
+    mult: dict[str, float] = {}
+
+    def visit(name: str, m: float, depth=0):
+        if name not in stats or depth > 50:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for callee, trip in stats[name].calls:
+            visit(callee, m * trip, depth + 1)
+
+    if entry:
+        visit(entry, 1.0)
+
+    total = CompStats()
+    for name, st in stats.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        total.dot_flops += m * st.dot_flops
+        total.hbm_bytes += m * st.hbm_bytes
+        for k in COLLECTIVES:
+            total.coll_bytes[k] += m * st.coll_bytes[k]
+            total.coll_counts[k] += int(m * st.coll_counts[k])
+    return {
+        "dot_flops": total.dot_flops,
+        "hbm_bytes": total.hbm_bytes,
+        "collective_bytes": total.coll_bytes,
+        "collective_counts": total.coll_counts,
+        "collective_total_bytes": sum(total.coll_bytes.values()),
+        "n_computations": len(comps),
+        "entry": entry,
+    }
+
+
+def top_ops(text: str, k: int = 15) -> list[tuple]:
+    """Top-k instructions by multiplied HBM bytes — the §Perf drill-down.
+    Returns (bytes, mult, op, instr, computation, result_type)."""
+    comps = _split_computations(text)
+    stats = {c[0]: _analyze_comp(c[0], c[2], c[3], True) for c in comps}
+    entry = next((c[0] for c in comps if c[1]), None)
+    mult: dict[str, float] = {}
+
+    def visit(name, m, depth=0):
+        if name not in stats or depth > 50:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for callee, trip in stats[name].calls:
+            visit(callee, m * trip, depth + 1)
+
+    if entry:
+        visit(entry, 1.0)
+    rows = []
+    for name, is_entry, header, body in comps:
+        m = mult.get(name, 0.0)
+        if not m or name.startswith("fused_"):
+            continue
+        one = CompStats()
+        shapes = {}
+        for mm in _RE_PARAM.finditer(header):
+            shapes[mm.group(1)] = (mm.group(2), mm.group(3))
+        for line in body:
+            md = _RE_DEF.match(line)
+            if not md:
+                continue
+            iname, rt, rd = md.groups()
+            shapes[iname] = (rt, rd)
+        for line in body:
+            md = _RE_DEF.match(line)
+            if not md:
+                continue
+            before = one.hbm_bytes
+            _count_line(one, line, shapes)
+            delta = one.hbm_bytes - before
+            if delta:
+                iname = md.group(1)
+                mo = _RE_OPNAME.search(line)
+                rows.append((m * delta, m,
+                             mo.group(1) if mo else "?", iname, name,
+                             f"{md.group(2)}[{md.group(3)}]"))
+    rows.sort(reverse=True)
+    return rows[:k]
+
+
+def _count_line(st: CompStats, line: str, shapes: dict) -> None:
+    """Single-line HBM accounting (same rules as _analyze_comp)."""
+    md = _RE_DEF.match(line)
+    if not md:
+        return
+    iname, rtype, rdims = md.groups()
+    mo = _RE_OPNAME.search(line)
+    op = mo.group(1) if mo else ""
+    if op in ("parameter", "constant", "get-tuple-element", "tuple",
+              "bitcast", ""):
+        return
+    args = line[line.find("(", line.find(op)):] if op else ""
+    operands = [o for o in _RE_OPERAND.findall(args) if o in shapes]
+    res_b = _nbytes(rtype, rdims)
+    if op == "dynamic-update-slice" or (
+            op == "fusion" and "dynamic-update-slice" in iname):
+        upd = [o for o in operands if shapes[o][1] != rdims]
+        st.hbm_bytes += 2 * sum(_nbytes(*shapes[o]) for o in upd)
+    elif op in ("dynamic-slice", "gather"):
+        st.hbm_bytes += 2 * res_b
+    elif op == "scatter":
+        if operands:
+            st.hbm_bytes += 3 * _nbytes(*shapes[operands[-1]])
+    elif op == "while":
+        pass
+    elif op == "fusion":
+        mk = re.search(r"kind=(k\w+)", line)
+        kind = mk.group(1) if mk else "kLoop"
+        if kind == "kInput":
+            st.hbm_bytes += res_b + sum(
+                _nbytes(*shapes[o]) for o in operands)
+        elif kind == "kOutput":
+            st.hbm_bytes += res_b + sum(
+                _nbytes(*shapes[o]) for o in operands
+                if shapes[o][1] != rdims)
+        else:
+            st.hbm_bytes += res_b + sum(
+                min(_nbytes(*shapes[o]), res_b) for o in operands)
+    else:
+        st.hbm_bytes += res_b + sum(_nbytes(*shapes[o]) for o in operands)

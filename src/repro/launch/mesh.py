@@ -1,0 +1,46 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init; smoke tests and benches see the real single device.
+
+Mesh axes:
+- ``pod``   (2)  — cross-pod data parallelism (optical links; gradient
+                   all-reduce, optionally int8-compressed);
+- ``data``  (16) — in-pod data parallel / FSDP axis;
+- ``model`` (16) — tensor-parallel axis (heads / d_ff / experts' d_ff).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _mk(shape, axes):
+    from jax.sharding import AxisType
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_smoke_mesh():
+    """1-device mesh with the production axis names (unit tests)."""
+    return _mk((1, 1), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """Data-parallel axes present in the mesh (pod first)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def mesh_device_count(mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

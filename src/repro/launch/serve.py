@@ -1,0 +1,110 @@
+"""Batched serving driver: wave-scheduled batching — a wave of requests is
+admitted together, prefilled in one fused call, then decoded in lockstep;
+the next wave starts when the wave completes.  (Slot-level continuous
+batching needs per-slot cache positions — noted as future work in
+DESIGN.md; the dense shared-position cache is what the decode_32k dry-run
+cells lower.)
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b --smoke \
+      --requests 8 --gen 32
+
+The BandMap framing: model weights are the highest-RD data at serving
+time (reused by every request every step), so throughput is
+weight-bandwidth-bound until the batch is large — the planner's multicast
+allocation (TP-resident shards) is what amortises them.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.models import model as M
+
+
+class WaveServer:
+    """Admit `slots` requests at a time; one prefill + N decode ticks."""
+
+    def __init__(self, cfg, params, *, slots: int = 4, s_max: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.s_max = s_max
+        self._prefill = jax.jit(
+            lambda p, b, c: M.prefill_step(cfg, p, b, c))
+        self._decode = jax.jit(
+            lambda p, b, c: M.serve_step(cfg, p, b, c))
+
+    def run_wave(self, prompts: np.ndarray, max_new: int,
+                 extra_inputs: dict | None = None) -> np.ndarray:
+        """prompts: (B<=slots, S) int32 (padded to equal length).
+        Returns generated tokens (B, max_new)."""
+        b, s = prompts.shape
+        assert b <= self.slots and s + max_new <= self.s_max
+        pad = self.slots - b
+        toks = np.pad(prompts, ((0, pad), (0, 0)))
+        cache = M.init_cache(self.cfg, self.slots, self.s_max)
+        batch = {"tokens": jnp.asarray(toks, jnp.int32)}
+        if extra_inputs:
+            batch.update(extra_inputs)
+        logits, cache = self._prefill(self.params, batch, cache)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        out = [np.asarray(nxt)]
+        for _ in range(max_new - 1):
+            step_batch = {"tokens": nxt[:, None]}
+            if extra_inputs and self.cfg.family == "encdec":
+                step_batch.update(extra_inputs)
+            nxt2, _, cache = self._decode(self.params, step_batch, cache)
+            nxt = nxt2[:, 0]
+            out.append(np.asarray(nxt))
+        return np.stack(out, axis=1)[:b]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-4b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke \
+        else get_config(args.arch)
+    params = M.init_params(cfg, 0)
+    server = WaveServer(cfg, params, slots=args.slots,
+                        s_max=args.prompt_len + args.gen + 8)
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab,
+                           size=(args.requests, args.prompt_len),
+                           dtype=np.int32)
+    extra = {}
+    if cfg.family == "encdec":
+        extra = {"audio_embeds": jnp.zeros(
+            (args.slots, cfg.enc_seq, cfg.d_model), jnp.bfloat16)}
+    if cfg.n_vision_tokens:
+        extra = {"vision_embeds": jnp.zeros(
+            (args.slots, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16)}
+
+    t0 = time.time()
+    outs = []
+    for lo in range(0, args.requests, args.slots):
+        wave = prompts[lo:lo + args.slots]
+        outs.append(server.run_wave(wave, args.gen, extra))
+    dt = time.time() - t0
+    total = args.requests * args.gen
+    print(f"served {args.requests} requests × {args.gen} tokens in "
+          f"{dt:.1f}s ({total / dt:.1f} tok/s); "
+          f"sample: {outs[0][0][:8].tolist()}")
+    return outs
+
+
+if __name__ == "__main__":
+    main()

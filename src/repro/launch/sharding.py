@@ -1,0 +1,185 @@
+"""Logical-axis sharding: rules map logical axis names to mesh axes.
+
+Model code annotates activations with ``constrain(x, ("batch","seq",...))``
+and parameters are annotated by path-based ``axes_for_path``.  The active
+rule set is installed by the launcher (``use_rules``) from the planner's
+output; with no rules installed every annotation is a no-op, so tests and
+single-device smoke runs never touch the mesh machinery.
+
+Divisibility fallback: a logical→mesh mapping is dropped (replicated) for a
+tensor dimension the mesh axis does not divide — e.g. qwen1.5's 20 heads on
+a 16-way model axis.  This is the planner's "multicast beats relay"
+degradation: replication of a high-reuse tensor is preferred over padded
+sharding (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+class Rules:
+    """logical axis name -> mesh axis (str | tuple | None)."""
+
+    def __init__(self, mapping: dict, mesh: Mesh):
+        self.mapping = dict(mapping)
+        self.mesh = mesh
+
+    def spec_for(self, names: tuple, shape: tuple | None = None) -> P:
+        """PartitionSpec for logical ``names``; drops non-divisible and
+        duplicate mesh-axis entries (first occurrence wins)."""
+        parts = []
+        used: set = set()
+        for i, nm in enumerate(names):
+            mx = self.mapping.get(nm)
+            if mx is None:
+                parts.append(None)
+                continue
+            axes = (mx,) if isinstance(mx, str) else tuple(mx)
+            axes = tuple(a for a in axes if a not in used)
+            if not axes:
+                parts.append(None)
+                continue
+            size = _axis_size(self.mesh, axes)
+            if shape is not None and shape[i] % size != 0:
+                # divisibility fallback: keep the divisible prefix
+                keep = []
+                for a in axes:
+                    if shape[i] % _axis_size(self.mesh, tuple(keep + [a])) \
+                            == 0:
+                        keep.append(a)
+                axes = tuple(keep)
+                if not axes:
+                    parts.append(None)
+                    continue
+            used.update(axes)
+            parts.append(axes[0] if len(axes) == 1 else axes)
+        return P(*parts)
+
+    def sharding_for(self, names: tuple, shape: tuple | None = None):
+        return NamedSharding(self.mesh, self.spec_for(names, shape))
+
+
+@contextlib.contextmanager
+def use_rules(rules: Rules | None):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def active_rules() -> Rules | None:
+    return getattr(_state, "rules", None)
+
+
+def constrain(x, names: tuple):
+    """with_sharding_constraint against the active rules (no-op without)."""
+    rules = active_rules()
+    if rules is None:
+        return x
+    spec = rules.spec_for(names, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+# --------------------------------------------------------- param axes map
+def axes_for_path(path: str, shape: tuple) -> tuple:
+    """Logical axis names for a parameter, from its pytree path.
+
+    Conventions (see models/*.py): stacked layer params have a leading
+    'layer' axis; expert weights lead with 'expert'; attention projections
+    end with (heads|kv_heads, head_dim).
+    """
+    p = path.lower()
+    nd = len(shape)
+
+    def lead(*names):
+        base = ("layer",) * (nd - len(names)) + tuple(names)
+        return base
+
+    if "embed/table" in p:
+        return ("vocab", "embed")
+    if "unembed" in p:
+        return lead("embed", "vocab")
+    if any(k in p for k in ("norm", "ln", "scale", "a_log", "dt_bias",
+                            "d_skip")) and nd <= 2:
+        return ("layer",) * (nd - 1) + ("embed",)
+    if "router" in p:
+        return lead("embed", "expert")
+    if "w_gate" in p or "w_up" in p:
+        return lead("expert", "embed", "mlp")
+    if "w_down" in p:
+        return lead("expert", "mlp", "embed")
+    if "/q/" in p or "/k/" in p or "/v/" in p:
+        if nd >= 3 and shape[-1] <= 512:
+            return lead("embed", "heads", "head_dim") if "/q/" in p \
+                else lead("embed", "kv_heads", "head_dim")
+        return lead("heads", "head_dim") if nd >= 2 else lead("head_dim")
+    if "/uk/" in p or "/uv/" in p:
+        return lead("kv_lora", "heads", "head_dim")
+    if "/dkv/" in p:
+        return lead("embed", "kv_lora")
+    if "/kpe/" in p:
+        return lead("embed", "head_dim")
+    if "/o/" in p:
+        return lead("heads_merged", "embed")
+    if "gate/" in p or "up/" in p:
+        return lead("embed", "mlp")
+    if "down/" in p:
+        return lead("mlp", "embed")
+    if "in_x" in p or "in_z" in p:
+        return lead("embed", "ssm_inner")
+    if "in_b" in p or "in_c" in p:
+        return lead("embed", "ssm_state")
+    if "in_dt" in p:
+        return lead("embed", "ssm_heads")
+    if "conv/w" in p:
+        return lead("conv_w", "ssm_inner")
+    if "conv/b" in p:
+        return lead("ssm_inner")
+    if "out/" in p:
+        return lead("ssm_inner", "embed")
+    # bias vectors and anything else: replicate non-layer dims
+    return ("layer",) * (nd - 1) + (None,) if nd else ()
+
+
+def path_str(keypath) -> str:
+    parts = []
+    for k in keypath:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/" + "/".join(parts) + "/"
+
+
+def param_axes_tree(params):
+    """Pytree of logical-axis tuples parallel to ``params``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, a: axes_for_path(path_str(kp), a.shape), params)
+
+
+def params_shardings(params, rules: Rules):
+    """NamedSharding pytree for a param (or ShapeDtypeStruct) pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, a: rules.sharding_for(
+            axes_for_path(path_str(kp), a.shape), a.shape), params)

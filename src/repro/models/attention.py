@@ -1,0 +1,247 @@
+"""Attention variants for the architecture pool.
+
+- GQA (grouped-query) with optional QKV bias, RoPE / M-RoPE, causal and
+  sliding-window masks — covers mixtral, gemma3, starcoder2, glm4, qwen1.5,
+  qwen2-vl, zamba2's shared attention block and whisper self-attention.
+- MLA (multi-head latent attention, DeepSeek-V2): low-rank compressed KV
+  cache (c_kv, k_pe) with both the naive (materialise K/V) and the
+  *absorbed* decode path (attention directly in the latent space) — the
+  absorbed path is the §Perf hillclimb for deepseek decode.
+- Cross-attention (whisper decoder).
+
+All paths use the chunked online-softmax implementation from
+``repro.kernels.flash_attention.ref`` (pure jnp, compiles on every backend);
+on a real TPU run the Pallas kernel in the same package is selected by
+``use_pallas=True`` in the model config.
+
+Shapes follow (B, S, H, D); KV caches are (B, S_max, H_kv, D).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .layers import apply_rope, dense, dense_init
+
+
+# ------------------------------------------------------------------ masking
+def causal_window_mask(q_pos, k_pos, window):
+    """(..., S_q, S_k) bool mask.  window: None or a (possibly traced)
+    scalar; values <= 0 mean plain causal — this lets per-layer window
+    arrays ride through `lax.scan` (gemma3's 5 local : 1 global)."""
+    m = q_pos[..., :, None] >= k_pos[..., None, :]
+    if window is not None:
+        w = jnp.asarray(window)
+        win_ok = (q_pos[..., :, None] - k_pos[..., None, :]) < w
+        m &= jnp.where(w > 0, win_ok, True)
+    return m
+
+
+def sdpa(q, k, v, mask, *, scale=None, logit_cap: float | None = None):
+    """Masked softmax(QK^T)V with GQA head broadcasting.
+
+    q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D); mask: broadcastable to
+    (B, Hq, Sq, Sk).  Uses fp32 softmax.  Memory O(Sq*Sk) — the chunked
+    flash path in kernels/flash_attention is used for long sequences.
+    """
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qh = q.reshape(b, sq, hkv, g, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qh, k,
+                        preferred_element_type=jnp.float32) * scale
+    if logit_cap is not None:
+        logits = logit_cap * jnp.tanh(logits / logit_cap)
+    # mask: (B?, 1, Sq, Sk) — the head axis must be broadcastable (size 1);
+    # insert the group axis so it broadcasts over (hkv, g).
+    assert mask.ndim == 4 and mask.shape[1] == 1, mask.shape
+    logits = jnp.where(mask[:, :, None, :, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+    return out.reshape(b, sq, hq, v.shape[-1])   # v dim may differ (MLA)
+
+
+# ---------------------------------------------------------------------- GQA
+def gqa_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+             *, qkv_bias: bool = False):
+    ks = jax.random.split(key, 4)
+    return {
+        "q": dense_init(ks[0], d_model, (n_heads, head_dim), bias=qkv_bias),
+        "k": dense_init(ks[1], d_model, (n_kv, head_dim), bias=qkv_bias),
+        "v": dense_init(ks[2], d_model, (n_kv, head_dim), bias=qkv_bias),
+        "o": dense_init(ks[3], n_heads * head_dim, d_model),
+    }
+
+
+def _flash_or_sdpa(q, k, v, *, q_offset, window, flash_block: int):
+    """Dispatch: chunked flash path for long sequences, plain SDPA for
+    short ones (and for decode where Sq is tiny)."""
+    sq, sk = q.shape[1], k.shape[1]
+    if sq * sk > 4096 * 4096 or (sq == 1 and sk > 8192):
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(
+            q, k, v, q_offset=q_offset, window=window,
+            block_k=flash_block)
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(sk)
+    mask = causal_window_mask(q_pos, k_pos, window)[None, None]
+    return sdpa(q, k, v, mask)
+
+
+def gqa_attention(p, x, positions, *, n_heads: int, n_kv: int,
+                  head_dim: int, rope_theta: float = 10000.0,
+                  window: int | None = None,
+                  mrope_sections: tuple[int, ...] | None = None,
+                  cache: dict | None = None,
+                  flash_block: int = 512):
+    """Returns (out, new_cache).  cache = {"k","v": (B,S_max,Hkv,D),
+    "pos": ()} for decode; None for train/prefill (full causal self-attn).
+    """
+    q = dense(p["q"], x)                       # (B,S,H,D)
+    k = dense(p["k"], x)
+    v = dense(p["v"], x)
+    q = apply_rope(q, positions, theta=rope_theta,
+                   mrope_sections=mrope_sections)
+    k = apply_rope(k, positions, theta=rope_theta,
+                   mrope_sections=mrope_sections)
+
+    if cache is None:
+        out = _flash_or_sdpa(q, k, v, q_offset=0, window=window,
+                             flash_block=flash_block)
+        new_cache = None
+    else:
+        pos = cache["pos"]                     # scalar int32: tokens so far
+        k_all = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+        v_all = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        s_max = k_all.shape[1]
+        q_pos = pos + jnp.arange(q.shape[1])
+        k_pos = jnp.arange(s_max)
+        mask = causal_window_mask(q_pos, k_pos, window)[None, None]
+        out = sdpa(q, k_all, v_all, mask)
+        new_cache = {"k": k_all, "v": v_all, "pos": pos + q.shape[1]}
+
+    b, s = x.shape[:2]
+    out = out.reshape(b, s, n_heads * head_dim)
+    return dense(p["o"], out), new_cache
+
+
+# ---------------------------------------------------------------------- MLA
+def mla_init(key, d_model: int, n_heads: int, *, kv_lora: int,
+             qk_nope_dim: int = 128, qk_rope_dim: int = 64,
+             v_dim: int = 128):
+    ks = jax.random.split(key, 6)
+    return {
+        "q": dense_init(ks[0], d_model, (n_heads, qk_nope_dim + qk_rope_dim)),
+        "dkv": dense_init(ks[1], d_model, kv_lora),      # compress
+        "kpe": dense_init(ks[2], d_model, qk_rope_dim),  # shared rope key
+        "uk": dense_init(ks[3], kv_lora, (n_heads, qk_nope_dim)),
+        "uv": dense_init(ks[4], kv_lora, (n_heads, v_dim)),
+        "o": dense_init(ks[5], n_heads * v_dim, d_model),
+    }
+
+
+def mla_attention(p, x, positions, *, n_heads: int, kv_lora: int,
+                  qk_nope_dim: int = 128, qk_rope_dim: int = 64,
+                  v_dim: int = 128, rope_theta: float = 10000.0,
+                  cache: dict | None = None, absorbed: bool = True):
+    """Multi-head latent attention.  Cache holds only (c_kv, k_pe):
+    (B, S_max, kv_lora) + (B, S_max, qk_rope_dim).
+
+    absorbed=True computes decode attention in the latent space
+    (q_nope·W_uk as a latent query; context re-expanded through W_uv),
+    avoiding re-materialising K/V for the whole cache every step —
+    the paper-facing §Perf optimization for deepseek decode.
+    """
+    b, s, _ = x.shape
+    q = dense(p["q"], x)                                  # (B,S,H,nope+rope)
+    q_nope, q_pe = q[..., :qk_nope_dim], q[..., qk_nope_dim:]
+    q_pe = apply_rope(q_pe, positions, theta=rope_theta)
+    c_kv = dense(p["dkv"], x)                             # (B,S,L)
+    k_pe = dense(p["kpe"], x)[:, :, None, :]              # (B,S,1,R)
+    k_pe = apply_rope(k_pe, positions, theta=rope_theta)[:, :, 0, :]
+
+    scale = (qk_nope_dim + qk_rope_dim) ** -0.5
+
+    if cache is not None:
+        pos = cache["pos"]
+        c_all = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, pos, 0))
+        kpe_all = jax.lax.dynamic_update_slice(
+            cache["k_pe"], k_pe.astype(cache["k_pe"].dtype), (0, pos, 0))
+        new_cache = {"c_kv": c_all, "k_pe": kpe_all, "pos": pos + s}
+        s_max = c_all.shape[1]
+        q_pos = pos + jnp.arange(s)
+        mask = (q_pos[:, None] >= jnp.arange(s_max)[None, :])[None, None]
+        if absorbed:
+            # latent query: (B,S,H,L);  logits from latent dot + rope dot
+            q_lat = jnp.einsum("bshn,lhn->bshl", q_nope,
+                               p["uk"]["w"].astype(q_nope.dtype))
+            logits = (jnp.einsum("bshl,bkl->bhsk", q_lat, c_all,
+                                 preferred_element_type=jnp.float32)
+                      + jnp.einsum("bshr,bkr->bhsk", q_pe, kpe_all,
+                                   preferred_element_type=jnp.float32))
+            w = jax.nn.softmax(
+                jnp.where(mask, logits * scale, -1e30), axis=-1)
+            ctx_lat = jnp.einsum("bhsk,bkl->bshl", w.astype(c_all.dtype),
+                                 c_all)
+            out = jnp.einsum("bshl,lhv->bshv", ctx_lat,
+                             p["uv"]["w"].astype(ctx_lat.dtype))
+        else:
+            k_nope = jnp.einsum("bkl,lhn->bkhn", c_all,
+                                p["uk"]["w"].astype(c_all.dtype))
+            val = jnp.einsum("bkl,lhv->bkhv", c_all,
+                             p["uv"]["w"].astype(c_all.dtype))
+            k_full = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(
+                    kpe_all[:, :, None, :],
+                    (*kpe_all.shape[:2], n_heads, qk_rope_dim))], axis=-1)
+            q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+            out = sdpa(q_full, k_full, val, mask, scale=scale)
+    else:
+        new_cache = None
+        k_nope = jnp.einsum("bkl,lhn->bkhn", c_kv,
+                            p["uk"]["w"].astype(c_kv.dtype))
+        val = jnp.einsum("bkl,lhv->bkhv", c_kv,
+                         p["uv"]["w"].astype(c_kv.dtype))
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(
+                k_pe[:, :, None, :],
+                (b, s, n_heads, qk_rope_dim))], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+        q_pos = jnp.arange(s)
+        mask = (q_pos[:, None] >= q_pos[None, :])[None, None]
+        out = sdpa(q_full, k_full, val, mask, scale=scale)
+
+    out = out.reshape(b, s, -1)
+    return dense(p["o"], out), new_cache
+
+
+# ------------------------------------------------------------- cross-attn
+def cross_attention_init(key, d_model: int, n_heads: int, head_dim: int):
+    ks = jax.random.split(key, 4)
+    return {
+        "q": dense_init(ks[0], d_model, (n_heads, head_dim), bias=True),
+        "k": dense_init(ks[1], d_model, (n_heads, head_dim)),
+        "v": dense_init(ks[2], d_model, (n_heads, head_dim), bias=True),
+        "o": dense_init(ks[3], n_heads * head_dim, d_model, bias=True),
+    }
+
+
+def cross_attention(p, x, enc_kv, *, n_heads: int, head_dim: int):
+    """enc_kv: dict with precomputed {"k","v"} (B, S_enc, H, D) — computed
+    once at prefill and spatially reused by every decode step (the
+    highest-RD tensor in the whisper transfer DFG; see planner)."""
+    b, s, _ = x.shape
+    q = dense(p["q"], x)
+    mask = jnp.ones((1, 1, s, enc_kv["k"].shape[1]), bool)
+    out = sdpa(q, enc_kv["k"], enc_kv["v"], mask)
+    return dense(p["o"], out.reshape(b, s, n_heads * head_dim))
+
+
+def encode_cross_kv(p, enc_out):
+    return {"k": dense(p["k"], enc_out), "v": dense(p["v"], enc_out)}

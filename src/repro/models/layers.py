@@ -1,0 +1,172 @@
+"""Shared neural-net primitives for the architecture pool.
+
+Pure-JAX (no flax): parameters are nested dicts of ``jnp.ndarray``; every
+init function mirrors an apply function.  Layer-stacked parameters carry a
+leading ``layer`` axis consumed by ``jax.lax.scan`` in transformer.py so
+compile time is depth-independent.
+
+Logical sharding axes: every param tensor is annotated (in
+``models/model.py: param_axes``) with logical axis names — 'embed', 'heads',
+'kv_heads', 'head_dim', 'mlp', 'vocab', 'expert', 'layer', 'ssm_inner',
+'ssm_state', ... — which launch/sharding.py maps onto the mesh via the
+planner's rules (with divisibility fallback).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncnorm_init(key, shape, scale: float, dtype=jnp.float32):
+    """Truncated-normal fan-in init (MaxText-style)."""
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def dense_init(key, d_in: int, d_out, *, bias: bool = False,
+               dtype=jnp.float32):
+    """d_out may be an int or a tuple (e.g. (heads, head_dim))."""
+    out_shape = (d_out,) if isinstance(d_out, int) else tuple(d_out)
+    w = truncnorm_init(key, (d_in, *out_shape), scale=d_in ** -0.5,
+                       dtype=dtype)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros(out_shape, dtype)
+    return p
+
+
+def dense(p, x, *, compute_dtype=jnp.bfloat16):
+    """x: (..., d_in) @ w: (d_in, *out) -> (..., *out)."""
+    w = p["w"].astype(compute_dtype)
+    x = x.astype(compute_dtype)
+    n_out = w.ndim - 1
+    y = jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=compute_dtype)
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    del n_out
+    return y
+
+
+# --------------------------------------------------------------------- norms
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(dt)
+
+
+def layernorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(dt)
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, np.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, *,
+               theta: float = 10000.0,
+               mrope_sections: tuple[int, ...] | None = None) -> jnp.ndarray:
+    """Rotary embedding.
+
+    x: (B, S, H, D); positions: (B, S) int32, or (3, B, S) for M-RoPE
+    (temporal/height/width position streams, qwen2-vl §2.1).  With
+    ``mrope_sections=(t, h, w)`` (pairs, summing to D/2) frequency bands are
+    split across the three streams.
+    """
+    d = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(d, theta))            # (D/2,)
+    if mrope_sections is None:
+        ang = positions[..., None].astype(jnp.float32) * inv   # (B,S,D/2)
+    else:
+        assert positions.ndim == 3 and sum(mrope_sections) == d // 2
+        ang3 = positions[..., None].astype(jnp.float32) * inv  # (3,B,S,D/2)
+        sec = np.cumsum((0,) + tuple(mrope_sections))
+        parts = [ang3[i, ..., sec[i]:sec[i + 1]] for i in range(3)]
+        ang = jnp.concatenate(parts, axis=-1)                  # (B,S,D/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[:, :, None, :].astype(x.dtype)
+    cos = cos[:, :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1)
+
+
+# ------------------------------------------------------------------ MLP/FFN
+def mlp_init(key, d_model: int, d_ff: int, *, gated: bool = True,
+             bias: bool = False):
+    ks = jax.random.split(key, 3)
+    p = {"up": dense_init(ks[0], d_model, d_ff, bias=bias),
+         "down": dense_init(ks[1], d_ff, d_model, bias=bias)}
+    if gated:
+        p["gate"] = dense_init(ks[2], d_model, d_ff, bias=bias)
+    return p
+
+
+def mlp(p, x, *, act=jax.nn.silu):
+    up = dense(p["up"], x)
+    if "gate" in p:
+        up = act(dense(p["gate"], x)) * up
+    else:
+        up = act(up)
+    return dense(p["down"], up)
+
+
+# ------------------------------------------------------------------- embeds
+def embed_init(key, vocab: int, d_model: int):
+    return {"table": truncnorm_init(key, (vocab, d_model), scale=1.0)}
+
+
+def embed(p, tokens, compute_dtype=jnp.bfloat16):
+    return jnp.take(p["table"].astype(compute_dtype), tokens, axis=0)
+
+
+def unembed(p, x, compute_dtype=jnp.bfloat16, logits_dtype=jnp.float32):
+    """Logits against the (possibly tied) embedding table."""
+    return jnp.einsum("bsd,vd->bsv", x.astype(compute_dtype),
+                      p["table"].astype(compute_dtype),
+                      preferred_element_type=logits_dtype)
+
+
+# ----------------------------------------------------------- causal conv1d
+def causal_conv1d_init(key, channels: int, width: int):
+    return {"w": truncnorm_init(key, (width, channels), scale=width ** -0.5),
+            "b": jnp.zeros((channels,), jnp.float32)}
+
+
+def causal_conv1d(p, x):
+    """Depthwise causal conv over sequence. x: (B, S, C)."""
+    w = p["w"].astype(x.dtype)                   # (W, C)
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    segs = [pad[:, i:i + x.shape[1], :] * w[i] for i in range(width)]
+    return sum(segs) + p["b"].astype(x.dtype)
+
+
+def causal_conv1d_step(p, x_t, conv_state):
+    """Single decode step. x_t: (B, C); conv_state: (B, W-1, C)."""
+    w = p["w"].astype(x_t.dtype)
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,W,C)
+    y = jnp.einsum("bwc,wc->bc", window, w) + p["b"].astype(x_t.dtype)
+    return y, window[:, 1:, :]

@@ -1,0 +1,168 @@
+"""Unified model entrypoints: parameter init/specs, decode-cache specs,
+loss, `train_step`, and `serve_step` — the two functions the launcher
+lowers for every (arch × shape × mesh) cell.
+
+Everything is pure-JAX over nested-dict pytrees; sharding enters only
+through `launch.sharding` annotations, so the same code runs on one CPU
+device (smoke tests) and on the 512-chip production mesh (dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as T
+from .transformer import ModelConfig
+
+
+# ------------------------------------------------------------------ params
+def init_params(cfg: ModelConfig, seed: int = 0):
+    return T.init_params(cfg, jax.random.PRNGKey(seed))
+
+
+def param_specs(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree of the parameters (no allocation)."""
+    return jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def count_params(cfg: ModelConfig) -> int:
+    specs = param_specs(cfg)
+    import numpy as np
+    return int(sum(np.prod(s.shape) for s in jax.tree.leaves(specs)))
+
+
+# ------------------------------------------------------------------- cache
+def cache_specs(cfg: ModelConfig, batch: int, s_max: int,
+                dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree of the decode cache for a batch of
+    ``batch`` sequences with capacity ``s_max``."""
+    L = cfg.n_layers
+    i32 = jnp.int32
+
+    def gqa_cache(lead):
+        return {
+            "k": jax.ShapeDtypeStruct(
+                (*lead, batch, s_max, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jax.ShapeDtypeStruct(
+                (*lead, batch, s_max, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "pos": jax.ShapeDtypeStruct(tuple(lead), i32),
+        }
+
+    if cfg.family in ("dense", "moe"):
+        if cfg.attn_kind == "mla":
+            layers = {
+                "c_kv": jax.ShapeDtypeStruct((L, batch, s_max, cfg.kv_lora),
+                                             dtype),
+                "k_pe": jax.ShapeDtypeStruct(
+                    (L, batch, s_max, cfg.qk_rope_dim), dtype),
+                "pos": jax.ShapeDtypeStruct((L,), i32),
+            }
+        else:
+            layers = gqa_cache((L,))
+    elif cfg.family == "ssm":
+        from .ssm import mamba2_cache_spec
+        one = mamba2_cache_spec(batch, d_model=cfg.d_model,
+                                d_state=cfg.d_state, expand=cfg.ssm_expand,
+                                n_groups=cfg.ssm_groups,
+                                head_dim=cfg.ssm_head_dim, dtype=dtype)
+        layers = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((L, *s.shape), s.dtype), one)
+    elif cfg.family == "hybrid":
+        from .ssm import mamba2_cache_spec
+        one = mamba2_cache_spec(batch, d_model=cfg.d_model,
+                                d_state=cfg.d_state, expand=cfg.ssm_expand,
+                                n_groups=cfg.ssm_groups,
+                                head_dim=cfg.ssm_head_dim, dtype=dtype)
+        n_inv = T.n_hybrid_attn_invocations(cfg)
+        layers = {
+            "mamba": jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((L, *s.shape), s.dtype), one),
+            "attn": gqa_cache((n_inv,)),
+        }
+    elif cfg.family == "encdec":
+        layers = gqa_cache((L,))
+        return {"layers": layers,
+                "cross_kv": {
+                    "k": jax.ShapeDtypeStruct(
+                        (L, batch, cfg.enc_seq, cfg.n_heads, cfg.head_dim),
+                        dtype),
+                    "v": jax.ShapeDtypeStruct(
+                        (L, batch, cfg.enc_seq, cfg.n_heads, cfg.head_dim),
+                        dtype)},
+                "pos": jax.ShapeDtypeStruct((), i32)}
+    else:
+        raise ValueError(cfg.family)
+    return {"layers": layers, "pos": jax.ShapeDtypeStruct((), i32)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int,
+               dtype=jnp.bfloat16):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, batch, s_max, dtype))
+
+
+# -------------------------------------------------------------------- loss
+def loss_fn(cfg: ModelConfig, params, batch, *, aux_weight: float = 0.01,
+            z_weight: float = 1e-4):
+    """Next-token CE (+ router aux loss + z-loss).  labels = -1 masked."""
+    logits, aux, _ = T.forward(cfg, params, batch)
+    logits = logits.astype(jnp.float32)   # CE reductions always in fp32
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:
+        # modality prefix (VLM stub): loss over the text suffix only
+        logits = logits[:, -labels.shape[1]:]
+    valid = labels >= 0
+    labels = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = (logz - ll) * valid
+    n = jnp.maximum(valid.sum(), 1)
+    ce_mean = ce.sum() / n
+    zloss = ((logz * valid) ** 2).sum() / n
+    total = ce_mean + aux_weight * aux + z_weight * zloss
+    return total, {"ce": ce_mean, "aux": aux, "zloss": zloss,
+                   "ntokens": n}
+
+
+# ------------------------------------------------------------- train step
+def make_train_step(cfg: ModelConfig, optimizer):
+    """optimizer: repro.optim object with init(params)/update(g, s, p)."""
+
+    def train_step(state, batch):
+        params, opt_state, step = state
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree.map(lambda p, u: p + u, params, updates)
+        gnorm = optax_global_norm(grads)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm,
+                       step=step.astype(jnp.float32))
+        return (params, opt_state, step + 1), metrics
+
+    return train_step
+
+
+def optax_global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+# ------------------------------------------------------------- serve step
+def prefill_step(cfg: ModelConfig, params, batch, cache):
+    """Run the prompt through the model, filling the cache; returns
+    (last-token logits, cache)."""
+    logits, _, cache = T.forward(cfg, params, batch, caches=cache)
+    return logits[:, -1:], cache
+
+
+def serve_step(cfg: ModelConfig, params, batch, cache):
+    """One decode step: batch["tokens"]: (B, 1) int32.  Greedy next token.
+    Returns (next_tokens (B,1), logits, new_cache)."""
+    logits, _, cache = T.forward(cfg, params, batch, caches=cache)
+    nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+    return nxt[:, None], logits, cache

@@ -1,0 +1,158 @@
+"""Mixture-of-experts FFN (mixtral: 8 routed top-2; deepseek-v2-lite:
+2 shared + 64 routed top-6).
+
+Dispatch is sort-based with ``jax.lax.ragged_dot``: tokens are flattened,
+sorted by assigned expert, pushed through the experts' weights as ragged
+groups, and combined with the router weights.  This keeps compiled FLOPs at
+the *active* count (6·N_active·D), unlike masked-dense MoE whose HLO FLOPs
+blow up by E/k — that ratio is exactly what §Roofline's
+MODEL_FLOPS/HLO_FLOPs column watches.
+
+The planner (core/planner.py) treats the expert weights as the
+highest-spatial-reuse tensors of MoE archs: every token block on every
+device needs the same expert shard — the CGRA analogue is a VIO with
+RD = |data axis|, so BandMap allocates them multicast (all-gather on the
+data axis) rather than relay hops.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, mlp, mlp_init, truncnorm_init
+
+
+def moe_init(key, d_model: int, *, n_experts: int, moe_d_ff: int,
+             n_shared: int = 0, shared_d_ff: int | None = None):
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], d_model, n_experts),
+        # Stacked expert weights: (E, d_model, d_ff) / (E, d_ff, d_model).
+        "w_gate": truncnorm_init(ks[1], (n_experts, d_model, moe_d_ff),
+                                 scale=d_model ** -0.5),
+        "w_up": truncnorm_init(ks[2], (n_experts, d_model, moe_d_ff),
+                               scale=d_model ** -0.5),
+        "w_down": truncnorm_init(ks[3], (n_experts, moe_d_ff, d_model),
+                                 scale=moe_d_ff ** -0.5),
+    }
+    if n_shared:
+        p["shared"] = mlp_init(
+            jax.random.fold_in(key, 99), d_model,
+            (shared_d_ff or moe_d_ff) * n_shared)
+    return p
+
+
+def moe_ffn(p, x, *, top_k: int, compute_dtype=jnp.bfloat16):
+    """x: (B, S, D) -> (B, S, D).  Router in fp32 for numerics."""
+    b, s, d = x.shape
+    n_experts = p["router"]["w"].shape[-1]
+    xf = x.reshape(b * s, d)
+    t = b * s
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        p["router"]["w"].astype(jnp.float32))
+    gate_w, gate_i = jax.lax.top_k(logits, top_k)           # (T, k)
+    gate_w = jax.nn.softmax(gate_w, axis=-1)                # normalised over k
+
+    # --- sort-based dispatch --------------------------------------------
+    flat_expert = gate_i.reshape(-1)                        # (T*k,)
+    flat_tok = jnp.repeat(jnp.arange(t), top_k)             # (T*k,)
+    flat_w = gate_w.reshape(-1)
+    order = jnp.argsort(flat_expert)                        # stable
+    sorted_tok = flat_tok[order]
+    sorted_w = flat_w[order]
+    group_sizes = jnp.bincount(flat_expert, length=n_experts)
+
+    xd = xf.astype(compute_dtype)[sorted_tok]               # (T*k, D) gather
+    gate = jax.lax.ragged_dot(xd, p["w_gate"].astype(compute_dtype),
+                              group_sizes)
+    up = jax.lax.ragged_dot(xd, p["w_up"].astype(compute_dtype),
+                            group_sizes)
+    h = jax.nn.silu(gate) * up                              # (T*k, F)
+    y = jax.lax.ragged_dot(h, p["w_down"].astype(compute_dtype),
+                           group_sizes)                     # (T*k, D)
+
+    # --- weighted combine (scatter-add back to token order) --------------
+    y = y * sorted_w[:, None].astype(y.dtype)
+    out = jnp.zeros((t, d), y.dtype).at[sorted_tok].add(y)
+
+    if "shared" in p:
+        out = out + mlp(p["shared"], xf)
+
+    aux = router_load_balancing_loss(logits, gate_i, n_experts, top_k)
+    return out.reshape(b, s, d), aux
+
+
+def moe_ffn_capacity(p, x, *, top_k: int, capacity_factor: float = 1.25,
+                     compute_dtype=jnp.bfloat16):
+    """Capacity-based MoE (§Perf optimized path).
+
+    Tokens are sorted by expert and packed into an (E, cap, D) buffer
+    (cap = ceil(T·k/E · capacity_factor); overflow tokens are dropped,
+    standard capacity semantics), processed by ONE batched matmul per
+    projection — (E, cap, D) @ (E, D, F) — and scattered back weighted.
+
+    Why: `lax.ragged_dot` decomposes on non-TPU backends into a dense
+    per-expert loop (T·k rows × EVERY expert -> E/k× the active FLOPs);
+    the batched form compiles to exactly 2·E·cap·D·F everywhere, which is
+    active-FLOPs × capacity_factor.  On the CGRA side this is BandMap's
+    quantitative allocation: give each expert 'cap' guaranteed slots
+    (ports) instead of letting the router relay everything everywhere.
+    """
+    bsz, s, d = x.shape
+    n_experts = p["router"]["w"].shape[-1]
+    xf = x.reshape(bsz * s, d)
+    t = bsz * s
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        p["router"]["w"].astype(jnp.float32))
+    gate_w, gate_i = jax.lax.top_k(logits, top_k)
+    gate_w = jax.nn.softmax(gate_w, axis=-1)
+
+    cap = int(-(-t * top_k // n_experts) * capacity_factor)
+    cap = max(cap, 1)
+    flat_expert = gate_i.reshape(-1)                     # (T*k,)
+    flat_tok = jnp.repeat(jnp.arange(t), top_k)
+    flat_w = gate_w.reshape(-1)
+    order = jnp.argsort(flat_expert)
+    se, stok, sw = flat_expert[order], flat_tok[order], flat_w[order]
+    # position of each row within its expert group
+    ones = jnp.ones_like(se)
+    pos_in_group = jnp.cumsum(ones) - 1
+    group_start = jnp.cumsum(jnp.bincount(se, length=n_experts)) \
+        - jnp.bincount(se, length=n_experts)
+    slot = pos_in_group - group_start[se]                # (T*k,)
+    keep = slot < cap
+    dest = se * cap + jnp.where(keep, slot, 0)
+
+    xe = jnp.zeros((n_experts * cap, d), compute_dtype)
+    xe = xe.at[dest].add(
+        jnp.where(keep[:, None], xf[stok].astype(compute_dtype), 0))
+    xe = xe.reshape(n_experts, cap, d)
+
+    gate = jnp.einsum("ecd,edf->ecf", xe,
+                      p["w_gate"].astype(compute_dtype))
+    up = jnp.einsum("ecd,edf->ecf", xe, p["w_up"].astype(compute_dtype))
+    h = jax.nn.silu(gate) * up
+    y = jnp.einsum("ecf,efd->ecd", h,
+                   p["w_down"].astype(compute_dtype))
+    y = y.reshape(n_experts * cap, d)
+
+    contrib = y[dest] * (sw * keep)[:, None].astype(y.dtype)
+    out = jnp.zeros((t, d), y.dtype).at[stok].add(contrib)
+
+    if "shared" in p:
+        out = out + mlp(p["shared"], xf)
+    aux = router_load_balancing_loss(logits, gate_i, n_experts, top_k)
+    return out.reshape(bsz, s, d), aux
+
+
+def router_load_balancing_loss(logits, gate_i, n_experts: int, top_k: int):
+    """Switch-style auxiliary load-balancing loss (fraction-dot-probability),
+    returned for the training objective."""
+    probs = jax.nn.softmax(logits, axis=-1)                 # (T, E)
+    density = jnp.mean(probs, axis=0)                       # mean router prob
+    onehot = jax.nn.one_hot(gate_i, n_experts, dtype=jnp.float32)
+    frac = jnp.mean(jnp.sum(onehot, axis=1), axis=0) / top_k
+    return n_experts * jnp.sum(frac * density)

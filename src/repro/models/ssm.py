@@ -1,0 +1,146 @@
+"""Mamba2 block (SSD — state-space duality, arXiv:2405.21060), used by
+mamba2-2.7b (pure SSM stack) and zamba2-1.2b (hybrid backbone).
+
+Projections → causal depthwise conv → SSD scan (chunked for train/prefill,
+recurrent step for decode) → gated RMSNorm → out-projection.  The scan math
+lives in kernels/ssd (ref.py oracle + Pallas TPU kernel).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd import ops as ssd_ops
+from repro.kernels.ssd.ref import ssd_step
+
+from .layers import causal_conv1d, causal_conv1d_init, causal_conv1d_step, \
+    dense, dense_init, rmsnorm, rmsnorm_init, truncnorm_init
+
+
+def mamba2_init(key, d_model: int, *, d_state: int, expand: int = 2,
+                head_dim: int = 64, n_groups: int = 1, conv_width: int = 4):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    ks = jax.random.split(key, 8)
+    conv_dim = d_inner + 2 * n_groups * d_state
+    return {
+        # fused input projection: [x, z, B, C, dt]
+        "in_x": dense_init(ks[0], d_model, d_inner),
+        "in_z": dense_init(ks[1], d_model, d_inner),
+        "in_b": dense_init(ks[2], d_model, n_groups * d_state),
+        "in_c": dense_init(ks[3], d_model, n_groups * d_state),
+        "in_dt": dense_init(ks[4], d_model, n_heads),
+        "conv": causal_conv1d_init(ks[5], conv_dim, conv_width),
+        "a_log": jnp.zeros((n_heads,), jnp.float32) + 0.5,
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "norm": rmsnorm_init(d_inner),
+        "out": dense_init(ks[6], d_inner, d_model),
+    }
+
+
+def _proj_conv(p, x, *, d_state: int, n_groups: int, conv_state=None):
+    """Shared projection+conv path; returns (xs, z, b, c, dt, new_conv)."""
+    z = dense(p["in_z"], x)
+    xs = dense(p["in_x"], x)
+    b = dense(p["in_b"], x)
+    c = dense(p["in_c"], x)
+    dt = dense(p["in_dt"], x)
+    xbc = jnp.concatenate([xs, b, c], axis=-1)
+    if conv_state is None:
+        xbc = causal_conv1d(p["conv"], xbc)
+        new_conv = None
+    else:
+        xbc, new_conv = causal_conv1d_step(p["conv"], xbc[:, 0, :],
+                                           conv_state)
+        xbc = xbc[:, None, :]
+    xbc = jax.nn.silu(xbc)
+    d_inner = xs.shape[-1]
+    xs = xbc[..., :d_inner]
+    b = xbc[..., d_inner:d_inner + n_groups * d_state]
+    c = xbc[..., d_inner + n_groups * d_state:]
+    return xs, z, b, c, dt, new_conv
+
+
+def mamba2_block(p, x, *, d_state: int, head_dim: int = 64,
+                 n_groups: int = 1, chunk: int = 64,
+                 cache: dict | None = None):
+    """x: (B, S, D).  cache (decode/prefill): {"conv": (B,W-1,conv_dim),
+    "ssm": (B,H,P,N)}.  Returns (out, new_cache).
+
+    With a cache and S > 1 (prefill) the chunked scan runs from the
+    cached state and the cache is refilled with the final SSM state and
+    the conv-window tail."""
+    bsz, s, _ = x.shape
+    if cache is not None and s > 1:
+        n_heads = p["a_log"].shape[0]
+        z = dense(p["in_z"], x)
+        xs = dense(p["in_x"], x)
+        b = dense(p["in_b"], x)
+        c = dense(p["in_c"], x)
+        dt = dense(p["in_dt"], x)
+        xbc_raw = jnp.concatenate([xs, b, c], axis=-1)
+        xbc = jax.nn.silu(causal_conv1d(p["conv"], xbc_raw))
+        d_inner = xs.shape[-1]
+        xs = xbc[..., :d_inner]
+        b = xbc[..., d_inner:d_inner + n_groups * d_state]
+        c = xbc[..., d_inner + n_groups * d_state:]
+        dt = jax.nn.softplus(dt + p["dt_bias"].astype(dt.dtype))
+        xh = xs.reshape(bsz, s, n_heads, head_dim)
+        y, final_state = ssd_ops.ssd(
+            xh, dt, p["a_log"], b.reshape(bsz, s, n_groups, d_state),
+            c.reshape(bsz, s, n_groups, d_state), chunk=min(chunk, s))
+        y = y + p["d_skip"].astype(y.dtype)[None, None, :, None] * xh
+        y = y.reshape(bsz, s, -1)
+        w = cache["conv"].shape[1]
+        new_cache = {"conv": xbc_raw[:, -w:, :].astype(cache["conv"].dtype),
+                     "ssm": final_state.astype(cache["ssm"].dtype)}
+        y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+        return dense(p["out"], y), new_cache
+    if cache is not None:
+        xs, z, b, c, dt, new_conv = _proj_conv(
+            p, x, d_state=d_state, n_groups=n_groups,
+            conv_state=cache["conv"])
+        n_heads = p["a_log"].shape[0]
+        dt = jax.nn.softplus(dt[:, 0, :] +
+                             p["dt_bias"].astype(dt.dtype))   # (B,H)
+        xh = xs[:, 0, :].reshape(bsz, n_heads, head_dim)
+        y, new_ssm = ssd_step(cache["ssm"], xh, dt, p["a_log"],
+                              b.reshape(bsz, n_groups, d_state),
+                              c.reshape(bsz, n_groups, d_state))
+        y = y + p["d_skip"].astype(y.dtype)[:, None] * xh
+        y = y.reshape(bsz, 1, -1)
+        new_cache = {"conv": new_conv, "ssm": new_ssm}
+    else:
+        xs, z, b, c, dt, _ = _proj_conv(p, x, d_state=d_state,
+                                        n_groups=n_groups)
+        n_heads = p["a_log"].shape[0]
+        dt = jax.nn.softplus(dt + p["dt_bias"].astype(dt.dtype))  # (B,S,H)
+        xh = xs.reshape(bsz, s, n_heads, head_dim)
+        y, _ = ssd_ops.ssd(xh, dt, p["a_log"],
+                           b.reshape(bsz, s, n_groups, d_state),
+                           c.reshape(bsz, s, n_groups, d_state),
+                           chunk=chunk)
+        y = y + p["d_skip"].astype(y.dtype)[None, None, :, None] * xh
+        y = y.reshape(bsz, s, -1)
+        new_cache = None
+
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return dense(p["out"], y), new_cache
+
+
+def mamba2_cache_spec(cfg_batch: int, *, d_model: int, d_state: int,
+                      expand: int = 2, n_groups: int = 1,
+                      conv_width: int = 4, head_dim: int = 64,
+                      dtype=jnp.float32):
+    """ShapeDtypeStructs for one layer's decode cache."""
+    d_inner = expand * d_model
+    conv_dim = d_inner + 2 * n_groups * d_state
+    n_heads = d_inner // head_dim
+    return {
+        "conv": jax.ShapeDtypeStruct(
+            (cfg_batch, conv_width - 1, conv_dim), dtype),
+        "ssm": jax.ShapeDtypeStruct(
+            (cfg_batch, n_heads, head_dim, d_state), jnp.float32),
+    }

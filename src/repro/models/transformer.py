@@ -1,0 +1,471 @@
+"""Unified transformer/SSM/hybrid stack covering the 10-arch pool.
+
+Families:
+- ``dense``  — GQA attention + (gated) MLP          (gemma3, starcoder2,
+               glm4, qwen1.5, qwen2-vl backbones)
+- ``moe``    — GQA or MLA attention + MoE FFN       (mixtral, deepseek-v2)
+- ``ssm``    — Mamba2 SSD blocks, attention-free    (mamba2-2.7b)
+- ``hybrid`` — Mamba2 backbone + one *shared* GQA block invoked every k
+               layers (zamba2-1.2b)
+- ``encdec`` — encoder (full attn) + decoder (causal self + cross)
+               (whisper-tiny; frontend stubbed to precomputed embeddings)
+
+Homogeneous layer groups are stacked on a leading ``layer`` axis and driven
+by ``jax.lax.scan`` so compile time is depth-independent; per-layer
+differences (gemma3's 5:1 local:global window pattern) ride through the
+scan as per-layer arrays.  ``jax.checkpoint`` wraps the scan body
+(activation remat) when cfg.remat == "block".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.sharding import constrain
+
+from . import attention as attn
+from . import layers as L
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+
+
+# ---------------------------------------------------------------- config
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    vocab: int = 32000
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    act: str = "silu"                # silu | gelu
+    gated_mlp: bool = True
+    tie_embeddings: bool = False
+    # attention pattern
+    sliding_window: int | None = None
+    swa_global_every: int = 0        # k>0: every k-th layer is global
+    logit_cap: float | None = None
+    mrope_sections: tuple[int, ...] | None = None
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0
+    # MLA
+    kv_lora: int = 0
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # SSM
+    d_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 64
+    ssm_groups: int = 1
+    # hybrid
+    hybrid_attn_every: int = 0       # shared attn block after every k layers
+    # enc-dec / modality stubs
+    n_enc_layers: int = 0
+    enc_seq: int = 0                 # whisper: 1500 precomputed frames
+    n_vision_tokens: int = 0         # qwen2-vl: stub patch embeddings
+    # compute
+    embed_scale: bool = False        # gemma/whisper style sqrt(d) scaling
+    remat: str = "block"             # none | block
+    use_pallas: bool = False
+    max_decode_len: int = 0          # 0 = use shape cell's seq_len
+    # §Perf knobs (baseline values are the paper-faithful defaults)
+    moe_impl: str = "ragged"         # ragged | capacity
+    logits_dtype: str = "float32"    # float32 | bfloat16 (bf16 backward)
+    mla_absorbed: bool = False       # decode MLA in latent space (§Perf)
+
+    @property
+    def attn_kind(self) -> str:
+        return "mla" if self.kv_lora else "gqa"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for the long_500k cell (SSM/hybrid, or SWA on every
+        layer — gemma3's global layers bound their window by position)."""
+        return self.family in ("ssm", "hybrid") or (
+            self.sliding_window is not None and self.swa_global_every == 0)
+
+    def norm_fn(self):
+        return (L.rmsnorm, L.rmsnorm_init) if self.norm == "rmsnorm" \
+            else (L.layernorm, L.layernorm_init)
+
+    def act_fn(self):
+        return jax.nn.silu if self.act == "silu" else jax.nn.gelu
+
+
+# ------------------------------------------------------------- layer init
+def _attn_init(cfg: ModelConfig, key):
+    if cfg.attn_kind == "mla":
+        return attn.mla_init(key, cfg.d_model, cfg.n_heads,
+                             kv_lora=cfg.kv_lora,
+                             qk_nope_dim=cfg.qk_nope_dim,
+                             qk_rope_dim=cfg.qk_rope_dim,
+                             v_dim=cfg.v_head_dim)
+    return attn.gqa_init(key, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                         cfg.head_dim, qkv_bias=cfg.qkv_bias)
+
+
+def _ffn_init(cfg: ModelConfig, key):
+    if cfg.family == "moe":
+        return moe_mod.moe_init(key, cfg.d_model, n_experts=cfg.n_experts,
+                                moe_d_ff=cfg.moe_d_ff,
+                                n_shared=cfg.n_shared_experts,
+                                shared_d_ff=cfg.moe_d_ff)
+    return L.mlp_init(key, cfg.d_model, cfg.d_ff, gated=cfg.gated_mlp,
+                      bias=cfg.norm == "layernorm")
+
+
+def _block_init(cfg: ModelConfig, key):
+    _, norm_init = cfg.norm_fn()
+    k1, k2 = jax.random.split(key)
+    return {"ln1": norm_init(cfg.d_model), "attn": _attn_init(cfg, k1),
+            "ln2": norm_init(cfg.d_model), "ffn": _ffn_init(cfg, k2)}
+
+
+def _mamba_layer_init(cfg: ModelConfig, key):
+    _, norm_init = cfg.norm_fn()
+    return {"ln": norm_init(cfg.d_model),
+            "mamba": ssm_mod.mamba2_init(
+                key, cfg.d_model, d_state=cfg.d_state,
+                expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim,
+                n_groups=cfg.ssm_groups)}
+
+
+def _stack_init(per_layer_init, key, n: int):
+    """vmap the per-layer init over a leading layer axis."""
+    return jax.vmap(per_layer_init)(jax.random.split(key, n))
+
+
+def init_params(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 8)
+    _, norm_init = cfg.norm_fn()
+    p: dict = {"embed": L.embed_init(ks[0], cfg.vocab, cfg.d_model),
+               "final_norm": norm_init(cfg.d_model)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = L.dense_init(ks[1], cfg.d_model, cfg.vocab)
+
+    if cfg.family in ("dense", "moe"):
+        p["layers"] = _stack_init(lambda k: _block_init(cfg, k), ks[2],
+                                  cfg.n_layers)
+    elif cfg.family == "ssm":
+        p["layers"] = _stack_init(lambda k: _mamba_layer_init(cfg, k),
+                                  ks[2], cfg.n_layers)
+    elif cfg.family == "hybrid":
+        p["layers"] = _stack_init(lambda k: _mamba_layer_init(cfg, k),
+                                  ks[2], cfg.n_layers)
+        p["shared_attn"] = _block_init(cfg, ks[3])   # ONE copy, reused
+    elif cfg.family == "encdec":
+        p["enc_layers"] = _stack_init(
+            lambda k: _block_init(cfg, k), ks[2], cfg.n_enc_layers)
+        p["enc_norm"] = norm_init(cfg.d_model)
+        p["layers"] = _stack_init(
+            lambda k: _decoder_block_init(cfg, k), ks[3], cfg.n_layers)
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+def _decoder_block_init(cfg: ModelConfig, key):
+    _, norm_init = cfg.norm_fn()
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": norm_init(cfg.d_model), "attn": _attn_init(cfg, k1),
+            "ln_x": norm_init(cfg.d_model),
+            "xattn": attn.cross_attention_init(k2, cfg.d_model, cfg.n_heads,
+                                               cfg.head_dim),
+            "ln2": norm_init(cfg.d_model),
+            "ffn": _ffn_init(cfg, k3)}
+
+
+# --------------------------------------------------------------- windows
+def layer_windows(cfg: ModelConfig) -> np.ndarray:
+    """Per-layer attention window (0 = full causal).  gemma3: 5 local :
+    1 global; mixtral: SWA everywhere."""
+    w = np.zeros(cfg.n_layers, np.int32)
+    if cfg.sliding_window is not None:
+        w[:] = cfg.sliding_window
+        if cfg.swa_global_every > 0:
+            w[cfg.swa_global_every - 1::cfg.swa_global_every] = 0
+    return w
+
+
+# --------------------------------------------------------------- blocks
+def _attn_apply(cfg: ModelConfig, p, x, positions, window, cache):
+    if cfg.attn_kind == "mla":
+        return attn.mla_attention(
+            p, x, positions, n_heads=cfg.n_heads, kv_lora=cfg.kv_lora,
+            qk_nope_dim=cfg.qk_nope_dim, qk_rope_dim=cfg.qk_rope_dim,
+            v_dim=cfg.v_head_dim, rope_theta=cfg.rope_theta, cache=cache,
+            absorbed=cfg.mla_absorbed)
+    return attn.gqa_attention(
+        p, x, positions, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+        head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+        window=window, mrope_sections=cfg.mrope_sections, cache=cache)
+
+
+def _block_apply(cfg: ModelConfig, p, x, positions, window, cache):
+    """Pre-norm transformer block.  window: None or dynamic scalar."""
+    norm, _ = cfg.norm_fn()
+    aux = jnp.zeros((), jnp.float32)
+    h, new_cache = _attn_apply(cfg, p["attn"], norm(p["ln1"], x),
+                               positions, window, cache)
+    x = x + h
+    ff_in = norm(p["ln2"], x)
+    if cfg.family == "moe":
+        moe_fn = (moe_mod.moe_ffn_capacity if cfg.moe_impl == "capacity"
+                  else moe_mod.moe_ffn)
+        h, aux = moe_fn(p["ffn"], ff_in, top_k=cfg.top_k)
+    else:
+        h = L.mlp(p["ffn"], ff_in, act=cfg.act_fn())
+    x = x + h
+    x = constrain(x, ("batch", "seq", "embed"))
+    return x, new_cache, aux
+
+
+def _mamba_apply(cfg: ModelConfig, p, x, cache):
+    norm, _ = cfg.norm_fn()
+    h, new_cache = ssm_mod.mamba2_block(
+        p["mamba"], norm(p["ln"], x), d_state=cfg.d_state,
+        head_dim=cfg.ssm_head_dim, n_groups=cfg.ssm_groups,
+        chunk=cfg.ssm_chunk, cache=cache)
+    x = x + h
+    x = constrain(x, ("batch", "seq", "embed"))
+    return x, new_cache
+
+
+# ----------------------------------------------------------- main stacks
+def _maybe_remat(cfg: ModelConfig, fn):
+    if cfg.remat == "block":
+        return jax.checkpoint(fn, prevent_cse=False)
+    return fn
+
+
+def _scan_blocks(cfg: ModelConfig, stacked, x, positions, windows, caches):
+    """Scan homogeneous transformer blocks.  caches: stacked pytree with
+    leading layer axis or None."""
+    def body(carry, per_layer):
+        xc, aux_acc = carry
+        p, w, cache = per_layer
+        xo, new_cache, aux = _block_apply(cfg, p, xc, positions,
+                                          w if windows is not None else None,
+                                          cache)
+        return (xo, aux_acc + aux), new_cache
+
+    body = _maybe_remat(cfg, body)
+    wins = (jnp.asarray(windows) if windows is not None
+            else jnp.zeros(cfg.n_layers, jnp.int32))
+    (x, aux), new_caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (stacked, wins, caches))
+    return x, aux, new_caches
+
+
+def _scan_mamba(cfg: ModelConfig, stacked, x, caches):
+    def body(carry, per_layer):
+        p, cache = per_layer
+        xo, new_cache = _mamba_apply(cfg, p, carry, cache)
+        return xo, new_cache
+
+    body = _maybe_remat(cfg, body)
+    x, new_caches = jax.lax.scan(body, x, (stacked, caches))
+    return x, new_caches
+
+
+def _hybrid_apply(cfg: ModelConfig, params, x, positions, caches):
+    """zamba2: mamba backbone; ONE shared attention block (weights reused)
+    applied after every ``hybrid_attn_every`` full layers.  The scan is
+    split into segments so each shared-attn *invocation* gets its own KV
+    cache — same weights, distinct activations."""
+    k = cfg.hybrid_attn_every
+    n = cfg.n_layers
+    aux = jnp.zeros((), jnp.float32)
+    new_mamba, new_attn = [], []
+    mcaches = caches["mamba"] if caches is not None else None
+    acaches = caches["attn"] if caches is not None else None
+    start, inv = 0, 0
+    while start < n:
+        end = min(start + k, n)
+        seg = jax.tree.map(lambda a: a[start:end], params["layers"])
+        seg_cache = (jax.tree.map(lambda a: a[start:end], mcaches)
+                     if mcaches is not None else None)
+        x, nc = _scan_mamba(cfg, seg, x, seg_cache)
+        new_mamba.append(nc)
+        if end - start == k:        # full segment -> shared attn invocation
+            ac = (jax.tree.map(lambda a: a[inv], acaches)
+                  if acaches is not None else None)
+            x, nac, a = _block_apply(cfg, params["shared_attn"], x,
+                                     positions, None, ac)
+            aux = aux + a
+            if nac is not None:
+                new_attn.append(nac)
+            inv += 1
+        start = end
+    new_caches = None
+    if caches is not None:
+        new_caches = {
+            "mamba": jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                                  *new_mamba),
+            "attn": jax.tree.map(lambda *xs: jnp.stack(xs, axis=0),
+                                 *new_attn),
+        }
+    return x, aux, new_caches
+
+
+def n_hybrid_attn_invocations(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.hybrid_attn_every
+
+
+# ----------------------------------------------------------------- entry
+def forward(cfg: ModelConfig, params, batch: dict, caches=None):
+    """Unified forward.
+
+    batch: {"tokens": (B, S_text) int32, optional "vision_embeds"
+    (B, Tv, D), "audio_embeds" (B, S_enc, D), "positions"}.
+    caches: None (train/prefill) or the decode cache pytree.
+    Returns (logits, aux_loss, new_caches).
+    """
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    if cfg.n_vision_tokens and "vision_embeds" in batch:
+        ve = batch["vision_embeds"].astype(x.dtype)
+        x = jnp.concatenate([ve, x], axis=1)
+
+    b, s = x.shape[:2]
+    if caches is not None and "pos" in (caches or {}):
+        positions = caches["pos"] + jnp.arange(s)[None, :]
+        positions = jnp.broadcast_to(positions, (b, s))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    if cfg.mrope_sections is not None:
+        positions = _mrope_positions(cfg, b, s, positions)
+
+    x = constrain(x, ("batch", "seq", "embed"))
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "moe"):
+        wins = layer_windows(cfg)
+        lc = caches["layers"] if caches is not None else None
+        x, aux, new_lc = _scan_blocks(
+            cfg, params["layers"], x, positions,
+            wins if cfg.sliding_window is not None else None, lc)
+        new_caches = _bump(caches, new_lc, s)
+    elif cfg.family == "ssm":
+        lc = caches["layers"] if caches is not None else None
+        x, new_lc = _scan_mamba(cfg, params["layers"], x, lc)
+        new_caches = _bump(caches, new_lc, s)
+    elif cfg.family == "hybrid":
+        lc = caches["layers"] if caches is not None else None
+        x, aux, new_lc = _hybrid_apply(cfg, params, x, positions, lc)
+        new_caches = _bump(caches, new_lc, s)
+    else:  # encdec
+        x, aux, new_caches = _encdec_forward(cfg, params, batch, x,
+                                             positions, caches)
+
+    norm, _ = cfg.norm_fn()
+    x = norm(params["final_norm"], x)
+    # logits dtype: fp32 is the faithful default; the bf16 §Perf knob
+    # keeps the whole backward cotangent chain in bf16 (the loss still
+    # upcasts for logsumexp) — halves activation HBM traffic.
+    ldt = jnp.float32 if cfg.logits_dtype == "float32" else jnp.bfloat16
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x, logits_dtype=ldt)
+    else:
+        logits = L.dense(params["unembed"], x).astype(ldt)
+    logits = constrain(logits, ("batch", "seq", "vocab"))
+    return logits, aux, new_caches
+
+
+def _bump(caches, new_layer_caches, s):
+    if caches is None:
+        return None
+    return {"layers": new_layer_caches, "pos": caches["pos"] + s}
+
+
+def _mrope_positions(cfg: ModelConfig, b, s, positions):
+    """Qwen2-VL M-RoPE position streams (temporal, height, width).
+
+    Prefill/train (s covers the vision prefix): the Tv = g*g stub patch
+    grid sits at t = 0 with (h, w) grid coordinates; text continues all
+    three streams linearly from g.  Decode (s == 1): text-only, all three
+    streams equal the absolute position (offset already in `positions`).
+    """
+    tv = cfg.n_vision_tokens
+    g = int(np.sqrt(tv)) if tv else 0
+    if tv and g * g == tv and s > tv:
+        hh = jnp.repeat(jnp.arange(g), g)
+        ww = jnp.tile(jnp.arange(g), g)
+        tt = jnp.zeros(tv, jnp.int32)
+        text = jnp.arange(s - tv) + g
+        pos3 = jnp.stack([
+            jnp.concatenate([tt, text]),
+            jnp.concatenate([hh, text]),
+            jnp.concatenate([ww, text])])                     # (3, S)
+        return jnp.broadcast_to(pos3[:, None, :], (3, b, s))
+    return jnp.broadcast_to(positions[None], (3, b, s))
+
+
+def _encdec_forward(cfg: ModelConfig, params, batch, x, positions, caches):
+    norm, _ = cfg.norm_fn()
+    aux = jnp.zeros((), jnp.float32)
+
+    if caches is None or caches.get("cross_kv") is None:
+        enc_x = batch["audio_embeds"].astype(x.dtype)
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(enc_x.shape[1])[None], enc_x.shape[:2])
+
+        def enc_body(carry, p):
+            xo, _, _ = _block_apply(cfg, p, carry, enc_pos, None, None)
+            return xo, None
+
+        enc_out, _ = jax.lax.scan(_maybe_remat(cfg, enc_body), enc_x,
+                                  params["enc_layers"])
+        enc_out = norm(params["enc_norm"], enc_out)
+        # Precompute per-decoder-layer cross KV: the classic spatially-
+        # reused tensor (RD = #decode steps) — computed ONCE.
+        cross_kv = jax.vmap(
+            lambda p: attn.encode_cross_kv(p["xattn"], enc_out)
+        )(params["layers"])
+    else:
+        cross_kv = caches["cross_kv"]
+
+    lc = caches["layers"] if caches is not None else None
+
+    def dec_body(carry, per_layer):
+        xc, aux_acc = carry
+        p, ckv, cache = per_layer
+        h, new_cache = _attn_apply(cfg, p["attn"], norm(p["ln1"], xc),
+                                   positions, None, cache)
+        xc = xc + h
+        xc = xc + attn.cross_attention(p["xattn"], norm(p["ln_x"], xc),
+                                       ckv, n_heads=cfg.n_heads,
+                                       head_dim=cfg.head_dim)
+        h = L.mlp(p["ffn"], norm(p["ln2"], xc), act=cfg.act_fn())
+        xc = xc + h
+        xc = constrain(xc, ("batch", "seq", "embed"))
+        return (xc, aux_acc), new_cache
+
+    (x, aux), new_lc = jax.lax.scan(
+        _maybe_remat(cfg, dec_body), (x, aux),
+        (params["layers"], cross_kv, lc))
+    new_caches = None
+    if caches is not None:
+        new_caches = {"layers": new_lc, "cross_kv": cross_kv,
+                      "pos": caches["pos"] + x.shape[1]}
+    return x, aux, new_caches

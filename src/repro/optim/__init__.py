@@ -1,0 +1,3 @@
+from .adamw import AdamW, cosine_schedule  # noqa: F401
+from .compression import (compress_grads, decompress_grads,  # noqa: F401
+                          error_feedback_update)

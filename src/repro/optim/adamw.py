@@ -1,0 +1,71 @@
+"""AdamW with global-norm clipping and cosine LR schedule (pure JAX,
+optax-free).  Moments are stored fp32; the update is returned as a delta so
+`train_step` composes it with any parameter dtype.
+
+Sharding note: moment tensors inherit the parameter sharding (same tree
+structure — `params_shardings` applies transparently), so optimizer state
+is fully sharded; the planner decides all-reduce vs reduce-scatter for the
+gradients themselves (launch/train.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float | object = 3e-4          # float or schedule(step) -> lr
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params):
+        count = state["count"] + 1
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+        # global-norm clip
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+        mu = jax.tree.map(lambda m, g: self.b1 * m + (1 - self.b1) * g,
+                          state["mu"], grads)
+        nu = jax.tree.map(
+            lambda v, g: self.b2 * v + (1 - self.b2) * jnp.square(g),
+            state["nu"], grads)
+        c1 = 1 - self.b1 ** count.astype(jnp.float32)
+        c2 = 1 - self.b2 ** count.astype(jnp.float32)
+        lr = self.lr(count) if callable(self.lr) else self.lr
+
+        def upd(m, v, p):
+            step = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
+            step = step + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, {"mu": mu, "nu": nu, "count": count}

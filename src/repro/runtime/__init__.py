@@ -1,0 +1,3 @@
+from .elastic import degraded_mesh_shape, plan_elastic_restart  # noqa: F401
+from .fault import FailureInjector, SimulatedFailure, run_with_recovery  # noqa: F401
+from .straggler import StragglerMitigator  # noqa: F401

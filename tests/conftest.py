@@ -1,0 +1,7 @@
+import os
+import sys
+
+# NOTE: deliberately NO xla_force_host_platform_device_count here — smoke
+# tests and benches must see the real single device (the dry-run sets its
+# own flag; see launch/dryrun.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

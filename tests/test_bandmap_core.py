@@ -1,0 +1,185 @@
+"""Unit + property tests for the paper's core pipeline (DFG, scheduler,
+conflict graph, MIS, validator)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (PAPER_KERNELS, cnkm_name, greedy_mis, make_cnkm,
+                        map_dfg, mii, res_mii, schedule_dfg, solve_mis)
+from repro.core.cgra import CGRAConfig
+from repro.core.conflict import (build_conflict_graph,
+                                 dense_conflicts_python)
+from repro.core.dfg import DFG, OpKind
+from repro.core.mis import ejection_repair, mis_indices
+from repro.core.validate import validate_mapping
+
+CGRA = CGRAConfig()
+
+
+# ------------------------------------------------------------------- DFG
+def test_cnkm_structure():
+    d = make_cnkm(3, 5)
+    assert len(d.v_i) == 3 and len(d.v_o) == 5
+    assert len(d.v_r) == 15
+    for v in d.v_i:
+        assert d.rd(v) == 5          # each input reused by m kernels
+    for v in d.v_o:
+        assert d.rd(v) == 1          # outputs have no spatial reuse
+
+
+def test_rec_mii_loop_carried():
+    d = DFG()
+    a = d.add_op(OpKind.COMPUTE)
+    b = d.add_op(OpKind.COMPUTE)
+    d.add_edge(a, b)
+    d.add_edge(b, a, distance=1)     # carried dependency
+    assert d.rec_mii() == 2
+
+
+def test_res_mii():
+    d = make_cnkm(5, 5)              # 25 computing ops on 16 PEs
+    assert res_mii(d, CGRA) == 2
+
+
+# -------------------------------------------------------------- schedule
+@pytest.mark.parametrize("mode", ["bandmap", "busmap"])
+@pytest.mark.parametrize("n,m", PAPER_KERNELS)
+def test_schedule_feasible(n, m, mode):
+    dfg = make_cnkm(n, m)
+    sched = schedule_dfg(dfg, CGRA, mode=mode)
+    ii = sched.ii
+    # resource feasibility per modulo slot
+    pe, ip, op_ = [0] * ii, [0] * ii, [0] * ii
+    for oid, t in sched.time.items():
+        kind = sched.dfg.ops[oid].kind
+        if kind in (OpKind.COMPUTE, OpKind.ROUTE):
+            pe[t % ii] += 1
+        elif kind == OpKind.VIN:
+            ip[t % ii] += 1
+        else:
+            op_[t % ii] += 1
+    assert max(pe) <= CGRA.n_pes
+    assert max(ip) <= CGRA.n_iports
+    assert max(op_) <= CGRA.n_oports
+    # dependencies respected (delivery may precede use thanks to LRF)
+    for e in sched.dfg.edges:
+        src_kind = sched.dfg.ops[e.src].kind
+        if src_kind == OpKind.VIN:
+            assert sched.time[e.src] <= sched.time[e.dst]
+        else:
+            assert sched.time[e.src] < sched.time[e.dst] + \
+                e.distance * ii
+
+
+def test_bandwidth_allocation_policy():
+    """RD > M gets Q = ceil(RD/M) ports (the paper's policy)."""
+    dfg = make_cnkm(2, 8)            # RD = 8, M = 4 -> Q = 2
+    sched = schedule_dfg(dfg, CGRA, mode="bandmap")
+    for q in sched.ports_allocated.values():
+        assert q == 2
+    # busmap forces one port per datum
+    sched_b = schedule_dfg(make_cnkm(2, 8), CGRA, mode="busmap")
+    assert all(q == 1 for q in sched_b.ports_allocated.values())
+    assert sched_b.n_routing_ops > 0
+
+
+# ---------------------------------------------------------------- MIS
+@given(st.integers(4, 60), st.floats(0.05, 0.5), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_mis_independence_property(n, density, seed):
+    """solve_mis always returns an independent set."""
+    rng = np.random.default_rng(seed)
+    adj = rng.random((n, n)) < density
+    adj = np.triu(adj, 1)
+    adj = adj | adj.T
+    sol = solve_mis(adj, max_iters=500, seed=seed)
+    idx = mis_indices(sol)
+    assert not adj[np.ix_(idx, idx)].any()
+    # maximality of greedy start: every outsider conflicts with S
+    g = greedy_mis(adj, rng)
+    gi = mis_indices(g)
+    for v in range(n):
+        if not g[v]:
+            assert adj[v, gi].any()
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_ejection_repair_preserves_independence(seed):
+    dfg = make_cnkm(3, 6)
+    sched = schedule_dfg(dfg, CGRA, mode="bandmap")
+    cg = build_conflict_graph(sched, CGRA)
+    sol = solve_mis(cg.adj, max_iters=300, seed=seed)
+    op_of = np.array([v.op for v in cg.vertices])
+    fixed = ejection_repair(cg.adj, sol, cg.op_vertices, op_of, seed=seed)
+    idx = mis_indices(fixed)
+    assert not cg.adj[np.ix_(idx, idx)].any()
+    assert fixed.sum() >= sol.sum()
+
+
+# ------------------------------------------------------- conflict graph
+@pytest.mark.parametrize("n,m,mode", [(2, 6, "bandmap"), (3, 6, "busmap"),
+                                      (4, 4, "bandmap")])
+def test_conflict_matrix_kernel_equals_python(n, m, mode):
+    sched = schedule_dfg(make_cnkm(n, m), CGRA, mode=mode)
+    cg = build_conflict_graph(sched, CGRA)
+    from repro.kernels.conflict_matrix.ops import conflict_matrix
+    fast = conflict_matrix(cg.vertices)
+    loops = dense_conflicts_python(cg.vertices, cg.op_vertices, sched.ii)
+    assert (fast == loops).all()
+
+
+def test_conflict_graph_has_clique_per_op():
+    sched = schedule_dfg(make_cnkm(2, 4), CGRA)
+    cg = build_conflict_graph(sched, CGRA)
+    for ids in cg.op_vertices.values():
+        for a in ids:
+            for b in ids:
+                if a != b:
+                    assert cg.adj[a, b]
+
+
+# ----------------------------------------------------------- end-to-end
+@pytest.mark.parametrize("n,m", [(1, 2), (2, 4), (2, 6), (4, 4)])
+def test_map_dfg_valid(n, m):
+    r = map_dfg(make_cnkm(n, m), CGRA, mode="bandmap")
+    assert r.ok, r.summary()
+    assert r.mis_size == r.n_ops
+    assert r.report.ok
+    # one placement per op, consistent with the schedule
+    assert set(r.placement) == set(r.sched.dfg.ops)
+
+
+def test_validator_catches_pe_clash():
+    r = map_dfg(make_cnkm(2, 4), CGRA)
+    placement = dict(r.placement)
+    quads = [o for o, v in placement.items() if v.kind == "quad"]
+    a, b = quads[0], quads[1]
+    # force two ops onto one PE instance at the same slot
+    va, vb = placement[a], placement[b]
+    if va.m == vb.m:
+        import dataclasses
+        placement[b] = dataclasses.replace(vb, pe=va.pe)
+        rep = validate_mapping(r.sched, CGRA, placement)
+        assert not rep.ok
+
+
+def test_paper_claims_no_grf():
+    """BandMap: fewer/equal routing PEs and same/better II than BusMap
+    (the paper's §IV-B claims), on the quick kernels."""
+    for (n, m) in [(2, 4), (2, 6), (4, 4)]:
+        rb = map_dfg(make_cnkm(n, m), CGRA, mode="bandmap")
+        ru = map_dfg(make_cnkm(n, m), CGRA, mode="busmap")
+        assert rb.ok and ru.ok
+        assert rb.ii <= ru.ii
+        assert rb.n_routing_pes <= ru.n_routing_pes
+        if m > 4:
+            assert rb.n_routing_pes < ru.n_routing_pes
+
+
+def test_grf_reaches_mii():
+    cgra = CGRAConfig(grf=8)
+    for (n, m) in [(2, 6), (3, 6)]:
+        r = map_dfg(make_cnkm(n, m), cgra, mode="bandmap")
+        assert r.ok and r.ii == r.mii

@@ -1,0 +1,168 @@
+"""Per-arch reduced-config smoke tests: one forward + train step + decode
+step on CPU, asserting shapes and no NaNs, plus family-specific
+behaviour (SWA masking, MLA absorbed==naive, prefill==decode replay)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_smoke_config
+from repro.models import model as M
+from repro.models import transformer as T
+from repro.optim import AdamW
+
+
+def make_batch(cfg, b=2, s=32, seed=0):
+    rng = np.random.default_rng(seed)
+    text = s - cfg.n_vision_tokens if cfg.n_vision_tokens else s
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (b, text)), jnp.int32)}
+    batch["labels"] = jnp.asarray(
+        rng.integers(0, cfg.vocab, (b, text)), jnp.int32)
+    if cfg.n_vision_tokens:
+        batch["vision_embeds"] = jnp.asarray(
+            rng.standard_normal((b, cfg.n_vision_tokens, cfg.d_model)),
+            jnp.bfloat16) * 0.1
+    if cfg.family == "encdec":
+        batch["audio_embeds"] = jnp.asarray(
+            rng.standard_normal((b, cfg.enc_seq, cfg.d_model)),
+            jnp.bfloat16) * 0.1
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_forward_and_shapes(arch):
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, 0)
+    b, s = 2, 32
+    batch = make_batch(cfg, b, s)
+    logits, aux, _ = T.forward(cfg, params, batch)
+    assert logits.shape == (b, s, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any())
+    assert jnp.isfinite(jnp.asarray(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    opt = AdamW(lr=1e-3)
+    params = M.init_params(cfg, 0)
+    state = (params, opt.init(params), jnp.zeros((), jnp.int32))
+    step = jax.jit(M.make_train_step(cfg, opt))
+    batch = make_batch(cfg)
+    state, m1 = step(state, batch)
+    state, m2 = step(state, batch)
+    assert np.isfinite(float(m1["loss"])) and np.isfinite(float(m2["loss"]))
+    assert float(m2["loss"]) < float(m1["loss"])   # same batch: must drop
+    for leaf in jax.tree.leaves(state[0]):
+        assert not bool(jnp.isnan(leaf).any())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_decode(arch):
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, 0)
+    b = 2
+    cache = M.init_cache(cfg, b, 16)
+    batch = {"tokens": jnp.ones((b, 1), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["audio_embeds"] = jnp.zeros((b, cfg.enc_seq, cfg.d_model),
+                                          jnp.bfloat16)
+    for _ in range(3):
+        nxt, logits, cache = M.serve_step(cfg, params, batch, cache)
+        batch = dict(batch, tokens=nxt)
+    assert nxt.shape == (b, 1)
+    assert int(cache["pos"]) == 3
+
+
+@pytest.mark.parametrize("arch", ["glm4-9b", "mamba2-2.7b", "zamba2-1.2b",
+                                  "deepseek-v2-lite-16b"])
+def test_prefill_then_decode_matches_full_forward(arch):
+    """Teacher-forced decode after prefill == full forward logits."""
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, 0)
+    b, s = 1, 12
+    batch = make_batch(cfg, b, s)
+    full_logits, _, _ = T.forward(cfg, params, batch)
+    # bf16 compute: chunked-scan prefill vs sequential decode reorder fp
+    # ops; SSM recurrences amplify that more than attention does.
+    atol = 0.15 if cfg.family in ("ssm", "hybrid") else 3e-2
+
+    cache = M.init_cache(cfg, b, s + 4, dtype=jnp.float32)
+    pre = {"tokens": batch["tokens"][:, :8]}
+    if "audio_embeds" in batch:
+        pre["audio_embeds"] = batch["audio_embeds"]
+    logits8, cache = M.prefill_step(cfg, params, pre, cache)
+    np.testing.assert_allclose(np.asarray(logits8[:, -1]),
+                               np.asarray(full_logits[:, 7]),
+                               atol=atol, rtol=atol)
+    # decode tokens 8..11 teacher-forced
+    for t in range(8, s):
+        step_batch = {"tokens": batch["tokens"][:, t:t + 1]}
+        if "audio_embeds" in batch and cfg.family == "encdec":
+            step_batch["audio_embeds"] = batch["audio_embeds"]
+        nxt, logits, cache = M.serve_step(cfg, params, step_batch, cache)
+        if t + 1 < s:
+            np.testing.assert_allclose(
+                np.asarray(logits[:, -1]), np.asarray(full_logits[:, t]),
+                atol=atol, rtol=atol)
+            # semantic agreement: same argmax token
+            assert int(jnp.argmax(logits[:, -1])) == \
+                int(jnp.argmax(full_logits[:, t]))
+
+
+def test_swa_mask_blocks_far_tokens():
+    from repro.models.attention import causal_window_mask
+    q = jnp.arange(10)
+    m = causal_window_mask(q, q, 3)
+    assert bool(m[5, 5]) and bool(m[5, 3])
+    assert not bool(m[5, 2])          # outside window
+    assert not bool(m[5, 6])          # acausal
+    m_full = causal_window_mask(q, q, 0)   # 0 = full causal (dynamic)
+    assert bool(m_full[9, 0])
+
+
+def test_mla_absorbed_equals_naive():
+    from repro.models import attention as A
+    cfg = get_smoke_config("deepseek-v2-lite-16b")
+    key = jax.random.PRNGKey(3)
+    p = A.mla_init(key, cfg.d_model, cfg.n_heads, kv_lora=cfg.kv_lora,
+                   qk_nope_dim=cfg.qk_nope_dim,
+                   qk_rope_dim=cfg.qk_rope_dim, v_dim=cfg.v_head_dim)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 1, cfg.d_model))
+    cache = {"c_kv": jax.random.normal(jax.random.PRNGKey(5),
+                                       (2, 16, cfg.kv_lora)),
+             "k_pe": jax.random.normal(jax.random.PRNGKey(6),
+                                       (2, 16, cfg.qk_rope_dim)),
+             "pos": jnp.asarray(8)}
+    kw = dict(n_heads=cfg.n_heads, kv_lora=cfg.kv_lora,
+              qk_nope_dim=cfg.qk_nope_dim, qk_rope_dim=cfg.qk_rope_dim,
+              v_dim=cfg.v_head_dim)
+    pos = jnp.asarray([[8], [8]])
+    o1, _ = A.mla_attention(p, x, pos, cache=dict(cache), absorbed=True,
+                            **kw)
+    o2, _ = A.mla_attention(p, x, pos, cache=dict(cache), absorbed=False,
+                            **kw)
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), atol=2e-2,
+                               rtol=2e-2)
+
+
+def test_hybrid_shared_attn_is_shared():
+    """zamba2's attention block params exist once (weight sharing)."""
+    cfg = get_smoke_config("zamba2-1.2b")
+    params = M.init_params(cfg, 0)
+    assert "shared_attn" in params
+    n_inv = T.n_hybrid_attn_invocations(cfg)
+    assert n_inv == cfg.n_layers // cfg.hybrid_attn_every
+    cache = M.cache_specs(cfg, 2, 16)
+    assert cache["layers"]["attn"]["k"].shape[0] == n_inv
+
+
+def test_moe_load_balancing_loss_positive():
+    cfg = get_smoke_config("mixtral-8x7b")
+    params = M.init_params(cfg, 0)
+    batch = make_batch(cfg)
+    _, aux, _ = T.forward(cfg, params, batch)
+    assert float(aux) > 0.0
