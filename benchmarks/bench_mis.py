@@ -1,0 +1,248 @@
+"""Engine benchmark: packed-bitset conflict build + multi-seed SBTS
+portfolio vs the seed (dense numpy) formulation, plus the per-kernel
+mapping table the paper's figures summarise.
+
+  PYTHONPATH=src python -m benchmarks.bench_mis [--quick]
+
+Sections (all written to artifacts/bench/bench_mis.json):
+
+  engine_speedup — C5K5 BusMap at II=2 (the densest feasible instance):
+                   graph build + K-restart MIS solve, seed dense engine
+                   vs bitset portfolio at an equal iteration budget.
+                   The acceptance bar is >= 3x.
+  kernel_table   — map wall-time, II, MII, routing PEs per CnKm kernel
+                   and mode under the default mapper parameters.
+  cgra_8x8       — end-to-end maps on an 8x8 CGRAConfig, the scenario
+                   the dense engine could not reach comfortably
+                   (|V_C| > 2000).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import (PAPER_KERNELS, cnkm_name, make_cnkm,  # noqa: E402
+                        map_dfg, schedule_dfg)
+from repro.core.cgra import CGRAConfig  # noqa: E402
+from repro.core.conflict import (_dep_ok,  # noqa: E402
+                                 build_conflict_graph, constructive_init,
+                                 dense_conflicts_python)
+from repro.core.mis import solve_mis_portfolio  # noqa: E402
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+# --------------------------------------------------------------------------
+# Frozen seed-engine reference (dense bool adjacency, single-trajectory
+# SBTS) — kept verbatim so the speedup comparison stays honest as the
+# live engine evolves.
+# --------------------------------------------------------------------------
+def _seed_dense_build(cg, sched) -> np.ndarray:
+    """Seed conflict-rule evaluation over prebuilt vertices.  Vertex
+    enumeration is excluded from both sides' timings (conservative: it
+    is charged to the bitset side only, inside build_conflict_graph)."""
+    adj = dense_conflicts_python(cg.vertices, cg.op_vertices, sched.ii)
+    for src, dst in {(e.src, e.dst) for e in sched.dfg.edges}:
+        for i in cg.op_vertices[src]:
+            for j in cg.op_vertices[dst]:
+                if not _dep_ok(cg.vertices[i], cg.vertices[j]):
+                    adj[i, j] = adj[j, i] = True
+    return adj
+
+
+def _seed_greedy_mis(adj, rng):
+    n = adj.shape[0]
+    deg = adj.sum(axis=1).astype(np.int64)
+    alive = np.ones(n, dtype=bool)
+    in_s = np.zeros(n, dtype=bool)
+    while alive.any():
+        cand = np.flatnonzero(alive)
+        d = deg[cand] + rng.random(cand.size)
+        v = cand[int(np.argmin(d))]
+        in_s[v] = True
+        kill = adj[v] & alive
+        alive[v] = False
+        alive[kill] = False
+        deg -= adj[:, kill].sum(axis=1)
+    return in_s
+
+
+def _seed_solve_mis(adj, *, target=None, max_iters=20000, tenure=7,
+                    seed=0, init=None):
+    n = adj.shape[0]
+    rng = np.random.default_rng(seed)
+    in_s = init.copy() if init is not None else _seed_greedy_mis(adj, rng)
+    conf = adj[:, in_s].sum(axis=1).astype(np.int64)
+    best = in_s.copy()
+    best_size = int(in_s.sum())
+    if target is not None and best_size >= target:
+        return best
+    tabu = np.zeros(n, dtype=np.int64)
+    stall = 0
+    for it in range(1, max_iters + 1):
+        size = int(in_s.sum())
+        addable = (~in_s) & (conf == 0)
+        if addable.any():
+            order = np.flatnonzero(addable)
+            rng.shuffle(order)
+            for v in order:
+                if not in_s[v] and conf[v] == 0:
+                    in_s[v] = True
+                    conf += adj[v]
+            size = int(in_s.sum())
+            if size > best_size:
+                best_size, best = size, in_s.copy()
+                stall = 0
+                if target is not None and best_size >= target:
+                    return best
+            continue
+        cand = np.flatnonzero((~in_s) & (conf == 1) & (tabu <= it))
+        if cand.size:
+            v = int(rng.choice(cand))
+            u = int(np.flatnonzero(adj[v] & in_s)[0])
+            in_s[u] = False
+            conf -= adj[u]
+            in_s[v] = True
+            conf += adj[v]
+            tabu[u] = it + tenure + int(rng.integers(0, 4))
+            stall += 1
+        else:
+            stall += 3
+        if stall > 60:
+            members = np.flatnonzero(in_s)
+            k = max(1, members.size // 10)
+            for u in rng.choice(members, size=k, replace=False):
+                in_s[u] = False
+                conf -= adj[u]
+                tabu[u] = it + tenure
+            stall = 0
+    return best
+
+
+# --------------------------------------------------------------------------
+def bench_engine_speedup(quick: bool = False) -> dict:
+    """C5K5 BusMap at II=2 (the densest feasible instance): graph build
+    plus the MIS restart budget `map_dfg` actually deploys at II = MII
+    (2 x mis_restarts = 20 trajectories x mis_iters iterations), seed
+    dense engine vs bitset portfolio.  Min of ``reps`` timings per side
+    to damp machine noise."""
+    cgra = CGRAConfig()
+    iters = 4000 if quick else 20000
+    k = 6 if quick else 20
+    reps = 1 if quick else 2
+    sched = schedule_dfg(make_cnkm(5, 5), cgra, mode="busmap", ii=2,
+                         max_ii=2)
+    n_ops = len(sched.dfg.ops)
+
+    cg_for_inits = build_conflict_graph(sched, cgra)
+    inits = [constructive_init(cg_for_inits, sched, cgra, seed=s)
+             if s % 3 != 2 else None for s in range(k)]
+
+    t_seed_build, t_seed_solve = 1e9, 1e9
+    seed_sizes = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        adj = _seed_dense_build(cg_for_inits, sched)
+        t_seed_build = min(t_seed_build, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        seed_sizes = []
+        for s in range(k):
+            sol = _seed_solve_mis(adj, target=n_ops, max_iters=iters,
+                                  seed=s, init=inits[s])
+            seed_sizes.append(int(sol.sum()))
+        t_seed_solve = min(t_seed_solve, time.perf_counter() - t0)
+
+    t_bit_build, t_bit_solve = 1e9, 1e9
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        cg = build_conflict_graph(sched, cgra)
+        t_bit_build = min(t_bit_build, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        bests = solve_mis_portfolio(cg.bits, inits=inits, target=n_ops,
+                                    max_iters=iters, seed=0)
+        t_bit_solve = min(t_bit_solve, time.perf_counter() - t0)
+
+    assert (cg.bits.to_dense() == adj).all(), "engines disagree on CG"
+    seed_total = t_seed_build + t_seed_solve
+    bit_total = t_bit_build + t_bit_solve
+    out = dict(
+        kernel="C5K5", mode="busmap", ii=2, n_vertices=cg.n,
+        n_edges=cg.n_edges, restarts=k, iters_per_restart=iters,
+        seed_build_s=round(t_seed_build, 4),
+        seed_solve_s=round(t_seed_solve, 4),
+        bitset_build_s=round(t_bit_build, 4),
+        bitset_solve_s=round(t_bit_solve, 4),
+        seed_best=max(seed_sizes),
+        bitset_best=int(bests.sum(axis=1).max()),
+        speedup=round(seed_total / bit_total, 2),
+    )
+    print(f"engine_speedup: seed {seed_total:.2f}s -> bitset "
+          f"{bit_total:.2f}s = {out['speedup']}x "
+          f"(best {out['seed_best']}/{out['bitset_best']} of {n_ops})")
+    return out
+
+
+def bench_kernel_table(quick: bool = False) -> list[dict]:
+    """Map wall-time / II / routing PEs per kernel and mode."""
+    rows = []
+    kw = dict(mis_restarts=4, mis_iters=8000, max_ii=8) if quick else {}
+    for (n, m) in PAPER_KERNELS:
+        for mode in ("bandmap", "busmap"):
+            r = map_dfg(make_cnkm(n, m), CGRAConfig(), mode=mode, **kw)
+            rows.append(dict(
+                kernel=cnkm_name(n, m), mode=mode, ok=r.ok, ii=r.ii,
+                mii=r.mii, routing_pes=r.n_routing_pes,
+                v_c=r.cg_size[0], e_c=r.cg_size[1],
+                attempts=r.attempts, wall_s=round(r.wall_s, 3)))
+            print(f"kernel_table: {rows[-1]}")
+    return rows
+
+
+def bench_8x8(quick: bool = False) -> list[dict]:
+    """End-to-end maps on an 8x8 PEA — out of reach for the dense path."""
+    big = CGRAConfig(rows=8, cols=8)
+    cases = [(3, 6, "bandmap"), (4, 8, "busmap")]
+    if not quick:
+        cases.append((5, 5, "bandmap"))
+    rows = []
+    for (n, m, mode) in cases:
+        r = map_dfg(make_cnkm(n, m), big, mode=mode)
+        rows.append(dict(kernel=cnkm_name(n, m), mode=mode, ok=r.ok,
+                         ii=r.ii, mii=r.mii,
+                         routing_pes=r.n_routing_pes, v_c=r.cg_size[0],
+                         e_c=r.cg_size[1], wall_s=round(r.wall_s, 3)))
+        print(f"cgra_8x8: {rows[-1]}")
+    return rows
+
+
+def run_all(quick: bool = False) -> dict:
+    bench = dict(
+        engine_speedup=bench_engine_speedup(quick),
+        kernel_table=bench_kernel_table(quick),
+        cgra_8x8=bench_8x8(quick),
+    )
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, "bench_mis.json")
+    with open(path, "w") as f:
+        json.dump(bench, f, indent=1)
+    print(f"wrote {path}")
+    return bench
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run_all(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

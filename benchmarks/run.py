@@ -11,7 +11,10 @@ artifacts/bench/<name>.csv.  Functions:
   ports          — allocated ports vs ceil(RD/M) (the §III-A policy)
   planner        — transfer-DFG bandwidth allocation per arch × shape,
                    predicted vs compiled collective bytes (beyond-paper)
-  conflict_kernel— conflict-matrix kernel timing vs python loops
+  conflict_kernel— conflict-matrix build: bitset rows / Pallas kernel
+                   vs python loops
+  mis_engine     — bitset+portfolio engine vs seed dense engine
+                   (details in artifacts/bench/bench_mis.json)
 """
 
 from __future__ import annotations
@@ -175,10 +178,12 @@ def bench_planner(quick: bool = False):
 
 
 def bench_conflict_kernel(quick: bool = False):
-    """Conflict-matrix construction: vectorised kernel path vs python
-    loops (the O(|V_C|²) hot spot)."""
+    """Conflict-matrix construction: packed-bitset rows (the engine's
+    path) and the vectorised Pallas kernel vs python loops (the
+    O(|V_C|²) hot spot)."""
     from repro.core import schedule_dfg
-    from repro.core.conflict import (build_conflict_graph,
+    from repro.core.conflict import (bitset_group_conflicts,
+                                     build_conflict_graph,
                                      dense_conflicts_python)
     from repro.kernels.conflict_matrix.ops import conflict_matrix
     rows = []
@@ -187,16 +192,38 @@ def bench_conflict_kernel(quick: bool = False):
         cg = build_conflict_graph(sched, CGRAConfig())
         t0 = time.perf_counter()
         for _ in range(3):
+            bitset_group_conflicts(cg.vertices, cg.op_vertices, sched.ii)
+        t_bits = (time.perf_counter() - t0) / 3
+        t0 = time.perf_counter()
+        for _ in range(3):
             conflict_matrix(cg.vertices)
         t_fast = (time.perf_counter() - t0) / 3
         t0 = time.perf_counter()
         dense_conflicts_python(cg.vertices, cg.op_vertices, sched.ii)
         t_slow = time.perf_counter() - t0
-        rows.append([cnkm_name(n, m), cg.n, f"{t_fast*1e3:.2f}",
-                     f"{t_slow*1e3:.2f}", f"{t_slow/t_fast:.1f}x"])
+        rows.append([cnkm_name(n, m), cg.n, f"{t_bits*1e3:.2f}",
+                     f"{t_fast*1e3:.2f}", f"{t_slow*1e3:.2f}",
+                     f"{t_slow/t_bits:.1f}x"])
     return _emit("conflict_kernel",
-                 ["kernel", "V_C", "vectorised_ms", "python_ms",
-                  "speedup"], rows)
+                 ["kernel", "V_C", "bitset_ms", "vectorised_ms",
+                  "python_ms", "bitset_speedup"], rows)
+
+
+def bench_mis_engine(quick: bool = False):
+    """Bitset + portfolio engine benchmark (full detail in
+    artifacts/bench/bench_mis.json)."""
+    from benchmarks.bench_mis import run_all
+    bench = run_all(quick=quick)
+    sp = bench["engine_speedup"]
+    rows = [["engine_speedup_c5k5_ii2", sp["speedup"]],
+            ["bitset_build_s", sp["bitset_build_s"]],
+            ["seed_build_s", sp["seed_build_s"]],
+            ["bitset_solve_s", sp["bitset_solve_s"]],
+            ["seed_solve_s", sp["seed_solve_s"]]]
+    for row in bench["cgra_8x8"]:
+        rows.append([f"map8x8_{row['kernel']}_{row['mode']}_wall_s",
+                     row["wall_s"]])
+    return _emit("mis_engine", ["name", "value"], rows)
 
 
 BENCHES = {
@@ -206,6 +233,7 @@ BENCHES = {
     "ports": bench_ports,
     "planner": bench_planner,
     "conflict_kernel": bench_conflict_kernel,
+    "mis_engine": bench_mis_engine,
 }
 
 

@@ -3,17 +3,19 @@ allocation) plus the TPU-mesh bandwidth planner built on the same machinery.
 """
 
 from .bandmap import MappingResult, compare_modes, map_dfg
+from .bitset import BitsetGraph
 from .cgra import CGRAConfig
 from .dfg import DFG, Edge, Op, OpKind
 from .kernels_cnkm import (EXTRA_KERNELS, PAPER_KERNELS,
                            all_paper_kernels, cnkm_name, make_cnkm)
-from .mis import greedy_mis, solve_mis
+from .mis import greedy_mis, solve_mis, solve_mis_portfolio
 from .schedule import ScheduledDFG, mii, res_mii, schedule_dfg
 from .tec import TEC
 
 __all__ = [
-    "MappingResult", "compare_modes", "map_dfg", "CGRAConfig", "DFG",
-    "Edge", "Op", "OpKind", "EXTRA_KERNELS", "PAPER_KERNELS", "all_paper_kernels",
-    "cnkm_name", "make_cnkm", "greedy_mis", "solve_mis", "ScheduledDFG",
+    "MappingResult", "compare_modes", "map_dfg", "BitsetGraph",
+    "CGRAConfig", "DFG", "Edge", "Op", "OpKind", "EXTRA_KERNELS",
+    "PAPER_KERNELS", "all_paper_kernels", "cnkm_name", "make_cnkm",
+    "greedy_mis", "solve_mis", "solve_mis_portfolio", "ScheduledDFG",
     "mii", "res_mii", "schedule_dfg", "TEC",
 ]

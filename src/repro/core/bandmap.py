@@ -15,12 +15,10 @@ import time as _time
 import numpy as np
 
 from .cgra import CGRAConfig
-import numpy as np
-
 from .conflict import (ConflictGraph, Vertex, build_conflict_graph,
                        constructive_init)
 from .dfg import DFG
-from .mis import ejection_repair, mis_indices, solve_mis
+from .mis import PortfolioSBTS, ejection_repair, mis_indices
 from .schedule import ScheduledDFG, mii, schedule_dfg
 from .validate import ValidationReport, validate_mapping
 
@@ -79,48 +77,93 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
             # Spend extra effort at II = MII: throughput is the top concern
             # (paper §III-A), so a success there dominates any II+1 mapping.
             budget = mis_restarts * (2 if cur_ii == the_mii else 1)
-            for k in range(budget):
-                attempts += 1
-                rs = seed * 1001 + cur_ii * 131 + jitter * 31 + k
-                # Warm-start most restarts from the structure-aware
-                # constructive placement; keep some cold starts.
-                init = (constructive_init(cg, sched, cgra, seed=rs)
-                        if k % 3 != 2 else None)
-                sol = solve_mis(cg.adj, target=n_ops, max_iters=mis_iters,
-                                seed=rs, init=init)
-                size = int(sol.sum())
-                if 0 < n_ops - size <= 4:
-                    # Ejection-chain repair of small shortfalls (multi-seed:
-                    # candidate order is randomised, so retries differ).
-                    op_of = np.empty(cg.n, dtype=np.int64)
-                    for i, v in enumerate(cg.vertices):
-                        op_of[i] = v.op
-                    for rk in range(6):
-                        fixed = ejection_repair(cg.adj, sol, cg.op_vertices,
-                                                op_of, depth=4,
-                                                seed=rs * 13 + rk)
-                        if int(fixed.sum()) >= n_ops:
-                            sol = fixed
-                            break
-                    else:
-                        sol = fixed
+            # Multi-seed SBTS portfolio: K independent trajectories advance
+            # in lock-step over the packed adjacency, early-exiting as soon
+            # as any seed covers every op.  Most seeds warm-start from the
+            # structure-aware constructive placement; some stay cold.
+            base = seed * 1001 + cur_ii * 131 + jitter * 31
+            inits = [constructive_init(cg, sched, cgra, seed=base + k)
+                     if k % 3 != 2 else None for k in range(budget)]
+            attempts += budget
+            sbts = PortfolioSBTS(cg.bits, inits, seed=base)
+            # Shared unpacked-row cache for the repair attempts; when the
+            # solver skipped its cache (graph too big), materialise one
+            # lazily so the retries don't each re-unpack n² rows.
+            row_cache = sbts._u8
+            op_of = np.fromiter((v.op for v in cg.vertices),
+                                dtype=np.int64, count=cg.n)
+            seen_sols: set[bytes] = set()
+            remaining = mis_iters
+            # Harvest rounds: run the portfolio until some seed covers all
+            # ops, validate every distinct complete solution, and — when
+            # the validator rejects them all (bus congestion / LRF
+            # overflow are invisible to the pairwise graph) — re-arm the
+            # complete seeds with a diversifying perturbation and resume
+            # the same trajectories until the iteration budget is spent.
+            fresh = budget
+            for rnd in range(4 * budget):
+                start_it = sbts.it
+                bests = sbts.run(remaining, target=n_ops)
+                remaining -= sbts.it - start_it
+                order = np.argsort(-bests.sum(axis=1), kind="stable")
+                for k in order:
+                    sol = bests[k].copy()
+                    key = sol.tobytes()
+                    if key in seen_sols:
+                        # Seeds often converge to the same best set;
+                        # repairing duplicates wastes the ejection budget.
+                        continue
+                    seen_sols.add(key)
                     size = int(sol.sum())
-                if size < n_ops:
-                    last = (sched, None, None, size, (cg.n, cg.n_edges))
-                    continue
-                placement = {cg.vertices[i].op: cg.vertices[i]
-                             for i in mis_indices(sol)}
-                report = validate_mapping(sched, cgra, placement)
-                last = (sched, placement, report, size, (cg.n, cg.n_edges))
-                if report.ok:
-                    return MappingResult(
-                        ok=True, mode=mode, ii=cur_ii, mii=the_mii,
-                        n_routing_pes=sched.n_routing_ops,
-                        ports_per_vio=dict(sched.ports_allocated),
-                        placement=placement, sched=sched, report=report,
-                        cg_size=(cg.n, cg.n_edges), mis_size=size,
-                        n_ops=n_ops, attempts=attempts,
-                        wall_s=_time.perf_counter() - t_start)
+                    if 0 < n_ops - size <= 4:
+                        # Ejection-chain repair of small shortfalls
+                        # (multi-seed: candidate order is randomised, so
+                        # retries differ).
+                        rs = base + rnd * 97 + int(k)
+                        if row_cache is None:
+                            row_cache = cg.bits.rows_u8(np.arange(cg.n))
+                        for rk in range(6):
+                            fixed = ejection_repair(
+                                cg.bits, sol, cg.op_vertices, op_of,
+                                depth=4, seed=rs * 13 + rk,
+                                row_cache=row_cache)
+                            if int(fixed.sum()) >= n_ops:
+                                sol = fixed
+                                break
+                        else:
+                            sol = fixed
+                        size = int(sol.sum())
+                    if size < n_ops:
+                        last = (sched, None, None, size,
+                                (cg.n, cg.n_edges))
+                        continue
+                    placement = {cg.vertices[i].op: cg.vertices[i]
+                                 for i in mis_indices(sol)}
+                    report = validate_mapping(sched, cgra, placement)
+                    last = (sched, placement, report, size,
+                            (cg.n, cg.n_edges))
+                    if report.ok:
+                        return MappingResult(
+                            ok=True, mode=mode, ii=cur_ii, mii=the_mii,
+                            n_routing_pes=sched.n_routing_ops,
+                            ports_per_vio=dict(sched.ports_allocated),
+                            placement=placement, sched=sched,
+                            report=report, cg_size=(cg.n, cg.n_edges),
+                            mis_size=size, n_ops=n_ops, attempts=attempts,
+                            wall_s=_time.perf_counter() - t_start)
+                if remaining <= 0:
+                    break
+                # Alternate a local diversification with a fully fresh
+                # restart (the portfolio analogue of the paper's
+                # independent-restart retry) for every harvested seed.
+                for j, k in enumerate(np.flatnonzero(
+                        sbts.best_size >= n_ops)):
+                    if j % 2 == 0:
+                        sbts.rearm(int(k))
+                    else:
+                        fresh += 1
+                        sbts.reset_seed(int(k), constructive_init(
+                            cg, sched, cgra, seed=base + fresh))
     sched, placement, report, size, cg_size = last
     return MappingResult(
         ok=False, mode=mode, ii=sched.ii if sched else -1, mii=the_mii,

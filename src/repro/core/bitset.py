@@ -1,0 +1,208 @@
+"""uint64-packed bitset adjacency — the conflict-graph storage engine.
+
+The binder solves MIS on graphs whose size grows with |ops| x |PEA|
+(an 8x8 CGRA already yields |V_C| > 1000), so the dense ``bool [n, n]``
+matrix of the original implementation is both the memory and the traffic
+bottleneck: every conflict-membership probe reads O(n) bytes.  Here a
+vertex's neighbourhood is one row of ``ceil(n/64)`` uint64 words (bit j of
+word j//64 = edge to vertex j, little-endian bit order), so membership
+tests, degree counts and S-conflict counts become O(n/64) word ops:
+
+- AND + popcount (``np.bitwise_count``) gives |N(v) ∩ S| per row, for the
+  whole graph in one vectorised ``[n, words]`` expression;
+- ``np.unpackbits`` turns a row back into a 0/1 vector for incremental
+  conflict-count updates (O(n/8) memory traffic instead of an O(n) bool
+  row, and one numpy call instead of a mask cascade);
+- group conflicts (per-op cliques, resource-occupancy cliques) are row
+  ORs of one precomputed group mask — no pairwise python loops.
+
+All layouts are little-endian on the bit level (``bitorder="little"``), so
+packing bool vectors via ``np.packbits(...).view(np.uint64)`` and the
+arithmetic path (``1 << (i & 63)`` into word ``i >> 6``) agree.
+"""
+
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+WORD = 64
+_ONE = np.uint64(1)
+_LITTLE = sys.byteorder == "little"
+
+
+def n_words(n: int) -> int:
+    return (n + WORD - 1) // WORD
+
+
+def make_set(n: int) -> np.ndarray:
+    """Empty bitset over a universe of ``n`` elements."""
+    return np.zeros(n_words(n), dtype=np.uint64)
+
+
+def set_bit(words: np.ndarray, i: int) -> None:
+    words[i >> 6] |= _ONE << np.uint64(i & 63)
+
+
+def clear_bit(words: np.ndarray, i: int) -> None:
+    words[i >> 6] &= ~(_ONE << np.uint64(i & 63))
+
+
+def test_bit(words: np.ndarray, i: int) -> bool:
+    return bool((words[i >> 6] >> np.uint64(i & 63)) & _ONE)
+
+
+def pack_bool(mask: np.ndarray) -> np.ndarray:
+    """Pack a bool/0-1 vector into uint64 words (little-endian bits)."""
+    mask = np.ascontiguousarray(mask, dtype=bool)
+    if _LITTLE:
+        packed = np.packbits(mask, bitorder="little")
+        pad = (-packed.size) % 8
+        if pad:
+            packed = np.concatenate([packed, np.zeros(pad, np.uint8)])
+        return packed.view(np.uint64).copy()
+    words = make_set(mask.size)
+    idx = np.flatnonzero(mask)
+    np.bitwise_or.at(words, idx >> 6,
+                     _ONE << (idx & 63).astype(np.uint64))
+    return words
+
+
+def pack_bool_rows(mask: np.ndarray) -> np.ndarray:
+    """Pack a bool matrix ``[m, n]`` into uint64 rows ``[m, words]``."""
+    mask = np.ascontiguousarray(mask, dtype=bool)
+    if mask.shape[1] == 0:
+        return np.zeros((mask.shape[0], 0), dtype=np.uint64)
+    if _LITTLE:
+        packed = np.packbits(mask, axis=1, bitorder="little")
+        pad = (-packed.shape[1]) % 8
+        if pad:
+            packed = np.pad(packed, ((0, 0), (0, pad)))
+        return np.ascontiguousarray(packed).view(np.uint64)
+    return np.stack([pack_bool(row) for row in mask])  # pragma: no cover
+
+
+def pack_indices(idx, n: int) -> np.ndarray:
+    """Bitset over ``n`` elements with the given indices set."""
+    words = make_set(n)
+    idx = np.asarray(idx, dtype=np.int64)
+    np.bitwise_or.at(words, idx >> 6, _ONE << (idx & 63).astype(np.uint64))
+    return words
+
+
+def unpack(words: np.ndarray, n: int) -> np.ndarray:
+    """Unpack a bitset (or a ``[..., words]`` batch) to 0/1 uint8 of
+    length ``n`` along the last axis."""
+    u8 = words.reshape(-1, words.shape[-1]).view(np.uint8)
+    if not _LITTLE:  # pragma: no cover - big-endian fallback
+        u8 = u8.reshape(-1, words.shape[-1], 8)[..., ::-1].reshape(
+            u8.shape[0], -1)
+    out = np.unpackbits(u8, axis=-1, bitorder="little", count=n)
+    return out.reshape(words.shape[:-1] + (n,))
+
+
+def popcount(words: np.ndarray) -> int:
+    return int(np.bitwise_count(words).sum())
+
+
+def indices(words: np.ndarray, n: int) -> np.ndarray:
+    """Sorted element indices present in the bitset."""
+    return np.flatnonzero(unpack(words, n))
+
+
+class BitsetGraph:
+    """Undirected graph as packed adjacency rows ``uint64 [n, words]``."""
+
+    __slots__ = ("n", "words", "rows")
+
+    def __init__(self, n: int):
+        self.n = n
+        self.words = n_words(n)
+        self.rows = np.zeros((n, self.words), dtype=np.uint64)
+
+    # ------------------------------------------------------------ build
+    def add_edge(self, i: int, j: int) -> None:
+        if i == j:
+            return
+        self.rows[i, j >> 6] |= _ONE << np.uint64(j & 63)
+        self.rows[j, i >> 6] |= _ONE << np.uint64(i & 63)
+
+    def add_edges(self, i_arr, j_arr) -> None:
+        """Vectorised symmetric edge insertion for index arrays."""
+        i = np.asarray(i_arr, dtype=np.int64)
+        j = np.asarray(j_arr, dtype=np.int64)
+        keep = i != j
+        i, j = i[keep], j[keep]
+        np.bitwise_or.at(self.rows, (i, j >> 6),
+                         _ONE << (j & 63).astype(np.uint64))
+        np.bitwise_or.at(self.rows, (j, i >> 6),
+                         _ONE << (i & 63).astype(np.uint64))
+
+    def add_clique(self, ids) -> None:
+        """Pairwise-connect every pair of ``ids`` (diagonal bits are set
+        too; call :meth:`clear_diagonal` once after building)."""
+        ids = np.asarray(ids, dtype=np.int64)
+        if ids.size < 2:
+            return
+        mask = pack_indices(ids, self.n)
+        self.rows[ids] |= mask
+
+    def clear_diagonal(self) -> None:
+        idx = np.arange(self.n, dtype=np.int64)
+        self.rows[idx, idx >> 6] &= ~(_ONE << (idx & 63).astype(np.uint64))
+
+    # ----------------------------------------------------------- queries
+    def has_edge(self, i: int, j: int) -> bool:
+        return test_bit(self.rows[i], j)
+
+    def degrees(self) -> np.ndarray:
+        return np.bitwise_count(self.rows).sum(axis=1, dtype=np.int64)
+
+    @property
+    def n_edges(self) -> int:
+        return popcount(self.rows) // 2
+
+    def row_u8(self, v: int) -> np.ndarray:
+        """Neighbourhood of ``v`` as a 0/1 uint8 vector."""
+        return unpack(self.rows[v], self.n)
+
+    def rows_u8(self, vs) -> np.ndarray:
+        """Batched :meth:`row_u8` — one unpackbits call for many rows."""
+        return unpack(self.rows[np.asarray(vs, dtype=np.int64)], self.n)
+
+    def neighbors(self, v: int) -> np.ndarray:
+        return np.flatnonzero(self.row_u8(v))
+
+    def conflict_counts(self, s_words: np.ndarray) -> np.ndarray:
+        """|N(v) ∩ S| for every v, one vectorised AND+popcount."""
+        return np.bitwise_count(self.rows & s_words).sum(
+            axis=1, dtype=np.int64)
+
+    def any_conflict(self, s_words: np.ndarray) -> bool:
+        """Does any member of S have a neighbour in S?"""
+        members = indices(s_words, self.n)
+        if members.size == 0:
+            return False
+        return bool((self.rows[members] & s_words).any())
+
+    # -------------------------------------------------------- conversion
+    def to_dense(self) -> np.ndarray:
+        return unpack(self.rows, self.n).astype(bool)
+
+    @classmethod
+    def from_dense(cls, adj: np.ndarray) -> "BitsetGraph":
+        adj = np.asarray(adj)
+        g = cls(adj.shape[0])
+        if g.n == 0:
+            return g
+        g.rows = pack_bool_rows(adj.astype(bool))
+        g.clear_diagonal()
+        return g
+
+
+def as_bitset_graph(adj) -> BitsetGraph:
+    """Accept either a dense bool adjacency matrix or a BitsetGraph."""
+    if isinstance(adj, BitsetGraph):
+        return adj
+    return BitsetGraph.from_dense(np.asarray(adj))

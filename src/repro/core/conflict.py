@@ -36,6 +36,7 @@ import dataclasses
 
 import numpy as np
 
+from .bitset import BitsetGraph
 from .cgra import CGRAConfig
 from .dfg import OpKind
 from .schedule import ScheduledDFG
@@ -60,9 +61,10 @@ class Vertex:
 @dataclasses.dataclass
 class ConflictGraph:
     vertices: list[Vertex]
-    adj: np.ndarray                # bool [n, n]
+    bits: BitsetGraph              # packed adjacency, uint64 [n, words]
     op_vertices: dict[int, list[int]]
     n_ops: int
+    _adj: np.ndarray | None = dataclasses.field(default=None, repr=False)
 
     @property
     def n(self) -> int:
@@ -70,7 +72,15 @@ class ConflictGraph:
 
     @property
     def n_edges(self) -> int:
-        return int(self.adj.sum()) // 2
+        return self.bits.n_edges
+
+    @property
+    def adj(self) -> np.ndarray:
+        """Dense bool view, materialised on first use (oracle/debug paths
+        only — the solver operates on ``bits``)."""
+        if self._adj is None:
+            self._adj = self.bits.to_dense()
+        return self._adj
 
 
 def _occupancy(v: Vertex, ii: int) -> list[tuple]:
@@ -145,23 +155,18 @@ def build_conflict_graph(sched: ScheduledDFG, cgra: CGRAConfig,
                 for c in range(cgra.cols):
                     add(Vertex(len(vertices), oid, QUAD, t, m, pe=(r, c)))
 
-    n = len(vertices)
-    # Dense part (per-op cliques + occupancy clashes).  Host default is
-    # the sparse group-loop formulation (it touches only actual
-    # conflicts, which beats materialising n² at every graph size we
-    # measured — artifacts/bench/conflict_kernel.csv); the tiled
+    # Group part (per-op cliques + occupancy clashes), emitted as packed
+    # bitset rows directly: each group is one row-OR of its member mask,
+    # never touching an n² bool matrix.  `dense_conflicts_python` below is
+    # kept as the loop oracle for the equivalence tests; the tiled
     # conflict-matrix kernel (kernels/conflict_matrix, Pallas) is the
     # TPU-offload formulation of the same rules, proven equal in
     # tests/test_bandmap_core.py and test_kernels.py.
     if use_kernel:
         from repro.kernels.conflict_matrix.ops import conflict_matrix
-        adj = conflict_matrix(vertices)
+        bits = BitsetGraph.from_dense(np.asarray(conflict_matrix(vertices)))
     else:
-        adj = dense_conflicts_python(vertices, op_vertices, ii)
-
-    def connect(i: int, j: int) -> None:
-        adj[i, j] = True
-        adj[j, i] = True
+        bits = bitset_group_conflicts(vertices, op_vertices, ii)
 
     # Routing ops re-driving IBUS_r clash with any port tuple on IBUS_r at
     # the same slot (edge rule 2, first clause).  A route with drive (ROW, r)
@@ -174,23 +179,91 @@ def build_conflict_graph(sched: ScheduledDFG, cgra: CGRAConfig,
     # remaining bus, which cannot be decided pairwise — so it is left to the
     # validator by design.
 
-    # Dependency realizability (rules 2b and 3b).
+    # Dependency realizability (rules 2b and 3b), vectorised per DFG edge
+    # over the producer x consumer candidate block.
+    _add_dep_conflicts(bits, vertices, op_vertices, dfg)
+
+    return ConflictGraph(vertices, bits, op_vertices, len(dfg.ops))
+
+
+def bitset_group_conflicts(vertices, op_vertices, ii: int) -> BitsetGraph:
+    """Per-op cliques + resource-occupancy cliques as packed rows.
+
+    Occupancy groups include same-op pairs that `dense_conflicts_python`
+    skips, but those pairs are already edges of the op's clique, so the
+    union is byte-identical to the oracle.
+    """
+    g = BitsetGraph(len(vertices))
+    for ids in op_vertices.values():
+        g.add_clique(ids)
+    by_res: dict[tuple, list[int]] = {}
+    for v in vertices:
+        for res in _occupancy(v, ii):
+            by_res.setdefault(res, []).append(v.idx)
+    for ids in by_res.values():
+        g.add_clique(ids)
+    g.clear_diagonal()
+    return g
+
+
+def _vertex_attrs(vertices) -> dict[str, np.ndarray]:
+    """Columnar vertex attributes for the vectorised `_dep_ok` block."""
+    n = len(vertices)
+    kind = np.empty(n, np.int8)        # 0 = tin, 1 = tout, 2 = quad
+    port = np.empty(n, np.int32)
+    grf = np.empty(n, bool)
+    pe_r = np.empty(n, np.int32)
+    pe_c = np.empty(n, np.int32)
+    drv = np.empty(n, np.int8)         # -1 = none, 0 = ROW, 1 = COL
+    drv_idx = np.empty(n, np.int32)
+    code = {TIN: 0, TOUT: 1, QUAD: 2}
+    for i, v in enumerate(vertices):
+        kind[i] = code[v.kind]
+        port[i] = v.port
+        grf[i] = v.mode == "grf"
+        pe_r[i], pe_c[i] = v.pe
+        if v.drive is None:
+            drv[i], drv_idx[i] = -1, -1
+        else:
+            drv[i] = 0 if v.drive[0] == ROW else 1
+            drv_idx[i] = v.drive[1]
+    return dict(kind=kind, port=port, grf=grf, pe_r=pe_r, pe_c=pe_c,
+                drv=drv, drv_idx=drv_idx)
+
+
+def _dep_ok_block(at: dict[str, np.ndarray], prod: np.ndarray,
+                  cons: np.ndarray) -> np.ndarray:
+    """Vectorised `_dep_ok` over the |prod| x |cons| candidate block."""
+    pi = {k: v[prod][:, None] for k, v in at.items()}
+    cj = {k: v[cons][None, :] for k, v in at.items()}
+    same_pe = (pi["pe_r"] == cj["pe_r"]) & (pi["pe_c"] == cj["pe_c"])
+    drive_ok = same_pe | np.where(pi["drv"] == 0,
+                                  cj["pe_r"] == pi["drv_idx"],
+                                  cj["pe_c"] == pi["drv_idx"])
+    plain_ok = (pi["pe_r"] == cj["pe_r"]) | (pi["pe_c"] == cj["pe_c"])
+    quad_ok = np.where(pi["drv"] >= 0, drive_ok, plain_ok)
+    tin_ok = pi["grf"] | (cj["pe_r"] == pi["port"])
+    tout_ok = pi["pe_c"] == cj["port"]
+    return np.where(pi["kind"] == 0, tin_ok,
+                    np.where(cj["kind"] == 1, tout_ok, quad_ok))
+
+
+def _add_dep_conflicts(bits: BitsetGraph, vertices, op_vertices,
+                       dfg) -> None:
+    at = _vertex_attrs(vertices)
     dep_pairs = {(e.src, e.dst) for e in dfg.edges}
     for src, dst in dep_pairs:
-        for i in op_vertices[src]:
-            vi = vertices[i]
-            for j in op_vertices[dst]:
-                vj = vertices[j]
-                if not _dep_ok(vi, vj):
-                    connect(i, j)
-
-    return ConflictGraph(vertices, adj, op_vertices, len(dfg.ops))
+        prod = np.asarray(op_vertices[src], dtype=np.int64)
+        cons = np.asarray(op_vertices[dst], dtype=np.int64)
+        bad_i, bad_j = np.nonzero(~_dep_ok_block(at, prod, cons))
+        if bad_i.size:
+            bits.add_edges(prod[bad_i], cons[bad_j])
 
 
 def dense_conflicts_python(vertices, op_vertices, ii: int) -> np.ndarray:
     """Reference python-loop formulation of the dense conflict rules
-    (per-op cliques + occupancy) — oracle for the kernel equivalence
-    test; build_conflict_graph uses the vectorised kernel path."""
+    (per-op cliques + occupancy) — oracle for the bitset/kernel
+    equivalence tests; build_conflict_graph emits packed bitset rows."""
     n = len(vertices)
     adj = np.zeros((n, n), dtype=bool)
 
@@ -285,6 +358,6 @@ def constructive_init(cg: ConflictGraph, sched: ScheduledDFG,
         scored = [bias(cg.vertices[i]) + 1e-3 * rng.random() for i in cands]
         best = cands[int(np.argmin(scored))]
         in_s[best] = True
-        conf += cg.adj[best]
+        conf += cg.bits.row_u8(best)
         placed[oid] = cg.vertices[best]
     return in_s

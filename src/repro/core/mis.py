@@ -1,8 +1,8 @@
-"""Phase 3b: maximum-independent-set solver.
+"""Phase 3b: maximum-independent-set solver on packed-bitset adjacency.
 
 The paper applies SBTS — general Swap-Based multiple neighborhood Tabu
-Search (Jin & Hao, 2015) — to the conflict graph.  This is a faithful
-re-implementation of its core loop over numpy adjacency:
+Search (Jin & Hao, 2015) — to the conflict graph.  This re-implements its
+core loop over :class:`~repro.core.bitset.BitsetGraph` rows:
 
 - greedy (min-degree, randomized) construction of an initial solution,
 - (1,0) *add* moves: insert any vertex with zero conflicts in S,
@@ -10,18 +10,32 @@ re-implementation of its core loop over numpy adjacency:
   and evict u (tabu on u for `tenure` iterations, aspiration on best),
 - perturbation (random k-eviction) when the search plateaus.
 
-`solve_mis` stops early when `target` (= |V_D|, one placement per op) is
-reached — the mapping use-case never needs a certified maximum.
+Two entry points:
+
+- :func:`solve_mis` — one SBTS trajectory (the original API; accepts a
+  dense bool matrix or a BitsetGraph);
+- :func:`solve_mis_portfolio` — K independent seeds advanced in lock-step:
+  every per-iteration quantity (conflict counts, move candidates, tabu
+  clocks) is a ``[K, n]`` array, so one numpy expression serves the whole
+  portfolio and the per-iteration interpreter overhead is amortised K-fold.
+  The portfolio exits as soon as any seed reaches ``target`` (= |V_D|, one
+  placement per op) — the mapping use-case never needs a certified maximum.
 """
 
 from __future__ import annotations
 
+import math as _math
+
 import numpy as np
 
+from .bitset import BitsetGraph, as_bitset_graph, pack_bool
 
-def greedy_mis(adj: np.ndarray, rng: np.random.Generator) -> np.ndarray:
-    n = adj.shape[0]
-    deg = adj.sum(axis=1).astype(np.int64)
+
+def greedy_mis(adj, rng: np.random.Generator) -> np.ndarray:
+    """Randomized min-degree construction; returns a maximal IS."""
+    g = as_bitset_graph(adj)
+    n = g.n
+    deg = g.degrees()
     alive = np.ones(n, dtype=bool)
     in_s = np.zeros(n, dtype=bool)
     while alive.any():
@@ -29,92 +43,310 @@ def greedy_mis(adj: np.ndarray, rng: np.random.Generator) -> np.ndarray:
         d = deg[cand] + rng.random(cand.size)  # random tie-break
         v = cand[int(np.argmin(d))]
         in_s[v] = True
-        kill = adj[v] & alive
+        kill = g.row_u8(v).astype(bool) & alive
         alive[v] = False
         alive[kill] = False
-        deg -= adj[:, kill].sum(axis=1)
+        deg -= np.bitwise_count(g.rows & pack_bool(kill)).sum(
+            axis=1, dtype=np.int64)
     return in_s
 
 
-def solve_mis(adj: np.ndarray, *, target: int | None = None,
+class PortfolioSBTS:
+    """K SBTS trajectories in lock-step over one BitsetGraph.
+
+    State arrays are ``[K, n]``; one super-iteration applies one move per
+    seed (a conflict-free add where available, else a tabu-guarded swap),
+    with per-seed plateau perturbation.  Independence is invariant per
+    seed: adds require ``conf == 0``, swaps evict the unique conflicting
+    member before inserting.
+    """
+
+    def __init__(self, g: BitsetGraph, inits, *, tenure: int = 7,
+                 seed: int = 0):
+        self.g = g
+        self.k = len(inits)
+        self.tenure = tenure
+        self.rng = np.random.default_rng(seed)
+        n = g.n
+        self.in_s = np.zeros((self.k, n), dtype=bool)
+        for i, init in enumerate(inits):
+            if init is None:
+                self.in_s[i] = greedy_mis(g, self.rng)
+            else:
+                self.in_s[i] = init
+        # conf[k, v] = number of members of S_k adjacent to v.
+        conf_dtype = np.int16 if n < (1 << 15) else np.int32
+        self.conf = np.stack([g.conflict_counts(pack_bool(row))
+                              for row in self.in_s]).astype(conf_dtype)
+        self.tabu = np.zeros((self.k, n), dtype=np.int32)
+        self.stall = np.zeros(self.k, dtype=np.int64)
+        # Desynchronized plateau thresholds: members of a lock-step
+        # portfolio stall together, so identical thresholds would fire
+        # every perturbation (and its add-sweep refill) simultaneously.
+        self._thresh = 60 + self.rng.integers(0, 24, self.k)
+        # Pregenerated tabu-tenure jitter (values 0..3): cycling 256 draws
+        # replaces a per-iteration bit-generator call.
+        self._ints = self.rng.integers(0, 4, (256, self.k), dtype=np.int32)
+        self.size = self.in_s.sum(axis=1)
+        self.best = self.in_s.copy()
+        self.best_size = self.size.copy()
+        self.it = 0
+        self._probe_adds = True
+        self._rand = self.rng.random((self.k, 2 * max(n, 1)),
+                                     dtype=np.float32)
+        self._pool_uses = 0
+        self._stride = 0   # drawn (coprime to n) at the first _draw
+        # Unpacked 0/1 row cache for delta updates: one unpackbits of the
+        # whole packed adjacency, after which each move's row fetch is a
+        # fancy gather.  Bounded to 32 MiB; beyond that, rows are unpacked
+        # per move (still O(n/8) traffic).
+        self._u8 = g.rows_u8(np.arange(n)) if 0 < n * n <= (1 << 25) \
+            else None
+
+    def _rows(self, vs: np.ndarray) -> np.ndarray:
+        return self._u8[vs] if self._u8 is not None else self.g.rows_u8(vs)
+
+    def _row(self, v: int) -> np.ndarray:
+        return self._u8[v] if self._u8 is not None else self.g.row_u8(v)
+
+    def run(self, max_iters: int, target: int | None = None) -> np.ndarray:
+        """Advance all seeds up to ``max_iters`` iterations each (an
+        iteration is a full (1,0) add sweep or one (1,1) swap, matching
+        the single-trajectory SBTS accounting); stop early when any
+        seed's best reaches ``target``.  Returns per-seed best
+        memberships ``bool [K, n]``."""
+        if self.g.n == 0 or self.k == 0:
+            return self.best
+        if target is not None and (self.best_size >= target).any():
+            return self.best
+        n, k_idx = self.g.n, np.arange(self.k)
+        for _ in range(max_iters):
+            self.it += 1
+            it = self.it
+            # Add moves appear only after evictions free a vertex's whole
+            # neighbourhood — probe for them periodically (and right
+            # after perturb/rearm/reset) instead of every iteration; a
+            # deferred (1,0) sweep costs at most 3 iterations of delay.
+            if self._probe_adds or it % 4 == 1:
+                self._probe_adds = False
+                # Tabu applies to re-insertion too: unlike the original
+                # solver's add phase, rearm/perturb evictions stay out
+                # for their tenure instead of being re-added on the next
+                # probe — that is what makes those diversifications
+                # actually diversify.
+                addable = (self.conf == 0) & (self.tabu <= it)
+                addable &= ~self.in_s
+                can_add = addable.any(axis=1)
+                if can_add.any():
+                    # (1,0) sweep: absorb every conflict-free outsider of
+                    # the affected seeds, then re-enter.
+                    self._sweep_adds(np.flatnonzero(can_add), addable)
+                    if target is not None and \
+                            (self.best_size >= target).any():
+                        return self.best
+                    continue
+            # Pure-swap fast path: every per-iteration quantity is one
+            # [K, n] expression, no boolean-mask copies.  No ~in_s term:
+            # members have conf == 0 by independence, so conf == 1
+            # already excludes them.
+            swapable = (self.conf == 1) & (self.tabu <= it)
+            r = self._draw(n)
+            vs = (r * swapable).argmax(axis=1)
+            # Validity by gather, not a second [K, n] reduction: the
+            # argmax lands on a candidate iff the seed has one.
+            has = swapable[k_idx, vs]
+            if not has.all():
+                self.stall[~has] += 3
+                if not has.any():
+                    self._perturb()
+                    continue
+            rows_v = self._rows(vs)
+            # Evict the unique in-S neighbour of each swap insertion.
+            us = (rows_v & self.in_s).argmax(axis=1)
+            rows_u = self._rows(us)
+            jit4 = self._ints[it & 255]
+            if has.all():
+                self.in_s[k_idx, us] = False
+                self.in_s[k_idx, vs] = True
+                self.conf += rows_v
+                self.conf -= rows_u
+                self.tabu[k_idx, us] = it + self.tenure + jit4
+                self.stall += 1
+            else:
+                hk = k_idx[has]
+                self.in_s[hk, us[has]] = False
+                self.in_s[hk, vs[has]] = True
+                self.conf[has] += rows_v[has]
+                self.conf[has] -= rows_u[has]
+                self.tabu[hk, us[has]] = it + self.tenure + jit4[has]
+                self.stall[has] += 1
+            if (self.stall > self._thresh).any():
+                self._perturb()
+        return self.best
+
+    def _draw(self, n: int) -> np.ndarray:
+        """Tie-break randoms: a strided view into a pregenerated pool
+        (refreshed every n draws), so the hot loop never calls the bit
+        generator for [K, n] data.  The stride is re-drawn coprime to n
+        at each refresh, so consecutive draws cycle through all n
+        offsets (a fixed stride degenerates when n divides it)."""
+        self._pool_uses += 1
+        if self._pool_uses >= n or self._stride == 0:
+            self._rand = self.rng.random((self.k, 2 * n),
+                                         dtype=np.float32)
+            self._pool_uses = 0
+            self._stride = int(self.rng.integers(1, max(n, 2)))
+            while _math.gcd(self._stride, n) != 1:
+                self._stride += 1
+        off = (self._pool_uses * self._stride) % n
+        return self._rand[:, off:off + n]
+
+    def _sweep_adds(self, states: np.ndarray, addable: np.ndarray) -> None:
+        """(1,0) phase: per affected seed, shuffle the (non-tabu)
+        conflict-free outsiders and insert them sequentially (earlier
+        inserts may re-conflict later candidates)."""
+        for k in states:
+            cand = np.flatnonzero(addable[k])
+            rows_c = self._rows(cand)
+            if not rows_c[:, cand].any():
+                # Pairwise conflict-free (the common case: a perturbation
+                # evicted a sparse set): insert the whole batch at once.
+                self.in_s[k, cand] = True
+                self.conf[k] += rows_c.sum(axis=0, dtype=self.conf.dtype)
+                self.size[k] += cand.size
+            else:
+                self.rng.shuffle(cand)
+                for v in cand:
+                    if self.conf[k, v] == 0 and not self.in_s[k, v]:
+                        self.in_s[k, v] = True
+                        self.conf[k] += self._row(v)
+                        self.size[k] += 1
+            if self.size[k] > self.best_size[k]:
+                self.best_size[k] = self.size[k]
+                self.best[k] = self.in_s[k]
+                self.stall[k] = 0
+
+    def rearm(self, k: int, frac: float = 0.25) -> None:
+        """Diversify seed ``k`` after the caller harvested its best (e.g.
+        the mapping validator rejected it): restart from the best set
+        minus a random slice, tabu the evicted vertices so the seed does
+        not immediately rebuild the same solution, and reset the best
+        tracking so the target early-exit re-arms."""
+        self.in_s[k] = self.best[k]
+        members = np.flatnonzero(self.in_s[k])
+        if members.size:
+            evict = self.rng.choice(
+                members, size=max(1, int(members.size * frac)),
+                replace=False)
+            self.in_s[k, evict] = False
+            self.tabu[k, evict] = self.it + 3 * self.tenure + \
+                self.rng.integers(0, 10)
+        self._resync(k)
+
+    def reset_seed(self, k: int, init: np.ndarray | None = None) -> None:
+        """Fully restart one trajectory from ``init`` (or a fresh greedy
+        construction) — the portfolio analogue of an independent SBTS
+        restart, used when a harvested solution failed downstream
+        validation and its basin looks exhausted."""
+        self.in_s[k] = greedy_mis(self.g, self.rng) if init is None \
+            else init
+        self.tabu[k] = 0
+        self._resync(k)
+
+    def _resync(self, k: int) -> None:
+        """Recompute seed ``k``'s derived state from ``in_s[k]`` after an
+        out-of-band membership edit, and re-arm its best tracking."""
+        if self._u8 is not None:
+            self.conf[k] = self._u8[self.in_s[k]].sum(axis=0,
+                                                      dtype=np.int32)
+        else:
+            self.conf[k] = self.g.conflict_counts(pack_bool(self.in_s[k]))
+        self.size[k] = int(self.in_s[k].sum())
+        self.best[k] = self.in_s[k]
+        self.best_size[k] = self.size[k]
+        self.stall[k] = 0
+        self._probe_adds = True
+
+    def _perturb(self) -> None:
+        """Random ~10 % eviction for seeds whose search plateaued.  The
+        per-seed thresholds are re-randomized after each firing, so in
+        steady state a firing involves one or two seeds, not the whole
+        lock-step portfolio at once."""
+        for k in np.flatnonzero(self.stall > self._thresh):
+            members = np.flatnonzero(self.in_s[k])
+            if members.size:
+                # ~10 % sample; duplicates dropped (cheaper than an
+                # exact without-replacement draw at this size).
+                pick = self.rng.integers(0, members.size,
+                                         max(1, members.size // 10))
+                evict = members[np.unique(pick)]
+                self.in_s[k, evict] = False
+                self.size[k] -= evict.size
+                self.conf[k] -= self._rows(evict).sum(
+                    axis=0, dtype=self.conf.dtype)
+                self.tabu[k, evict] = self.it + self.tenure
+            self.stall[k] = 0
+            self._thresh[k] = 60 + self.rng.integers(0, 24)
+            self._probe_adds = True
+
+
+def solve_mis_portfolio(adj, *, inits, target: int | None = None,
+                        max_iters: int = 20000, tenure: int = 7,
+                        seed: int = 0) -> np.ndarray:
+    """Run ``len(inits)`` independent SBTS seeds (``None`` entries start
+    from the randomized greedy construction) and return the per-seed best
+    memberships ``bool [K, n]``, early-exiting when any seed hits
+    ``target``."""
+    g = as_bitset_graph(adj)
+    if g.n == 0:
+        return np.zeros((max(len(inits), 1), 0), dtype=bool)
+    sbts = PortfolioSBTS(g, inits, tenure=tenure, seed=seed)
+    return sbts.run(max_iters, target=target)
+
+
+def solve_mis(adj, *, target: int | None = None,
               max_iters: int = 20000, tenure: int = 7,
               seed: int = 0, init: np.ndarray | None = None) -> np.ndarray:
     """Return a boolean membership vector of an (approximately maximum)
-    independent set of the conflict graph ``adj``.  ``init`` may supply an
-    independent set to warm-start from (e.g. the constructive placement)."""
-    n = adj.shape[0]
-    if n == 0:
+    independent set of the conflict graph ``adj`` (dense bool matrix or
+    BitsetGraph).  ``init`` may supply an independent set to warm-start
+    from (e.g. the constructive placement)."""
+    g = as_bitset_graph(adj)
+    if g.n == 0:
         return np.zeros(0, dtype=bool)
-    rng = np.random.default_rng(seed)
-    in_s = init.copy() if init is not None else greedy_mis(adj, rng)
-    # conf[v] = number of members of S adjacent to v.
-    conf = adj[:, in_s].sum(axis=1).astype(np.int64)
-    best = in_s.copy()
-    best_size = int(in_s.sum())
-    if target is not None and best_size >= target:
-        return best
-    tabu = np.zeros(n, dtype=np.int64)
-    stall = 0
-    for it in range(1, max_iters + 1):
-        size = int(in_s.sum())
-        # (1,0) add moves: all conflict-free outsiders at once.
-        addable = (~in_s) & (conf == 0)
-        if addable.any():
-            order = np.flatnonzero(addable)
-            rng.shuffle(order)
-            for v in order:
-                if not in_s[v] and conf[v] == 0:
-                    in_s[v] = True
-                    conf += adj[v]
-            size = int(in_s.sum())
-            if size > best_size:
-                best_size, best = size, in_s.copy()
-                stall = 0
-                if target is not None and best_size >= target:
-                    return best
-            continue
-        # (1,1) swap: v outside with exactly one conflicting member u.
-        cand = np.flatnonzero((~in_s) & (conf == 1) & (tabu <= it))
-        if cand.size:
-            v = int(rng.choice(cand))
-            u = int(np.flatnonzero(adj[v] & in_s)[0])
-            in_s[u] = False
-            conf -= adj[u]
-            in_s[v] = True
-            conf += adj[v]
-            tabu[u] = it + tenure + int(rng.integers(0, 4))
-            stall += 1
-        else:
-            stall += 3
-        if stall > 60:
-            # Perturbation: evict a random ~10 % of S.
-            members = np.flatnonzero(in_s)
-            k = max(1, members.size // 10)
-            evict = rng.choice(members, size=k, replace=False)
-            for u in evict:
-                in_s[u] = False
-                conf -= adj[u]
-                tabu[u] = it + tenure
-            stall = 0
-    return best
+    bests = solve_mis_portfolio(g, inits=[init], target=target,
+                                max_iters=max_iters, tenure=tenure,
+                                seed=seed)
+    return bests[0]
 
 
 def mis_indices(membership: np.ndarray) -> np.ndarray:
     return np.flatnonzero(membership)
 
 
-def ejection_repair(adj: np.ndarray, in_s: np.ndarray,
+def ejection_repair(adj, in_s: np.ndarray,
                     op_vertices: dict[int, list[int]],
                     op_of: np.ndarray, *, depth: int = 3,
-                    seed: int = 0) -> np.ndarray:
+                    seed: int = 0,
+                    row_cache: np.ndarray | None = None) -> np.ndarray:
     """Ejection-chain repair: try to place every op that has no selected
     candidate by inserting one of its candidates, evicting the (≤2)
     conflicting members, and recursively re-placing the evicted ops'
     alternatives up to ``depth``.  Closes the 1–2-vertex shortfalls SBTS
-    plateaus on for tightly-packed instances (e.g. BusMap C4K8)."""
+    plateaus on for tightly-packed instances (e.g. BusMap C4K8).
+
+    ``row_cache`` may supply the unpacked 0/1 adjacency (e.g. a
+    PortfolioSBTS's cache) so repeated repair attempts on one graph
+    don't each re-unpack it."""
+    g = as_bitset_graph(adj)
     rng = np.random.default_rng(seed)
     in_s = in_s.copy()
-    conf = adj[:, in_s].sum(axis=1).astype(np.int64)
+    conf = g.conflict_counts(pack_bool(in_s))
+    # Unpacked row cache: the chain search touches rows many times per
+    # node, so pay one unpackbits for the whole graph up front.
+    u8 = row_cache if row_cache is not None else (
+        g.rows_u8(np.arange(g.n)) if g.n
+        else np.zeros((0, 0), dtype=np.uint8))
     nodes = [0]  # search-node budget (keeps worst-case bounded)
 
     def place(op: int, d: int, banned: set[int]) -> bool:
@@ -127,12 +359,14 @@ def ejection_repair(adj: np.ndarray, in_s: np.ndarray,
         # Prefer fewest evictions.
         cands.sort(key=lambda v: conf[v])
         for v in cands:
-            evict = np.flatnonzero(adj[v] & in_s)
             if conf[v] == 0:
                 in_s[v] = True
-                conf += adj[v]
+                conf += u8[v]
                 return True
-            if d == 0 or len(evict) > 2:
+            if d == 0:
+                continue
+            evict = np.flatnonzero(u8[v] & in_s)
+            if len(evict) > 2:
                 continue
             evicted_ops = [int(op_of[u]) for u in evict]
             # Snapshot: recursive placements mutate state and `all` short-
@@ -140,11 +374,11 @@ def ejection_repair(adj: np.ndarray, in_s: np.ndarray,
             in_s_snap, conf_snap = in_s.copy(), conf.copy()
             for u in evict:
                 in_s[u] = False
-                conf -= adj[u]
+                conf -= u8[u]
             in_s[v] = True
-            conf += adj[v]
-            nb = banned | {v}
-            if all(place(eo, d - 1, nb) for eo in evicted_ops):
+            conf += u8[v]
+            nb_banned = banned | {v}
+            if all(place(eo, d - 1, nb_banned) for eo in evicted_ops):
                 return True
             in_s[:] = in_s_snap
             conf = conf_snap
@@ -155,5 +389,5 @@ def ejection_repair(adj: np.ndarray, in_s: np.ndarray,
         if op not in placed_ops:
             if place(op, depth, set()):
                 placed_ops.add(op)
-    assert not adj[np.ix_(in_s, in_s)].any(), "repair broke independence"
+    assert not g.any_conflict(pack_bool(in_s)), "repair broke independence"
     return in_s

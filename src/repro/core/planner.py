@@ -28,6 +28,8 @@ from __future__ import annotations
 import dataclasses
 import math
 
+import numpy as np
+
 from repro.models.transformer import ModelConfig
 
 from .dfg import DFG, OpKind
@@ -71,6 +73,45 @@ class Plan:
                 f"axis={t.axis:6s} {t.bytes_per_step/2**20:10.1f} MiB/step"
                 f"  {t.note}")
         return "\n".join(lines)
+
+
+def schedule_transfer_rounds(plan: "Plan", *, seed: int = 0,
+                             max_rounds: int = 64) -> list[list[str]]:
+    """Decompose a plan's byte-moving transfers into bandwidth rounds.
+
+    Transfers on the same mesh axis contend for that axis's links — the
+    mesh analogue of two ops driving one bus instance — so a round is an
+    independent set of the contention graph.  We reuse the CGRA binder's
+    packed-bitset MIS engine: peel a maximum independent set per round
+    until every transfer is placed.  Returns tensor-name rounds, densest
+    first; the round count is the plan's serialization depth (1 = all
+    collectives can overlap)."""
+    from .bitset import BitsetGraph
+    from .mis import solve_mis
+
+    act = [t for t in plan.transfers if t.bytes_per_step > 0]
+    rounds: list[list[str]] = []
+    remaining = list(range(len(act)))
+    for _ in range(max_rounds):
+        if not remaining:
+            break
+        g = BitsetGraph(len(remaining))
+        for a in range(len(remaining)):
+            for b in range(a + 1, len(remaining)):
+                if act[remaining[a]].axis == act[remaining[b]].axis:
+                    g.add_edge(a, b)
+        # Greedy construction already yields the maximum IS for a union
+        # of cliques; a short tabu budget covers non-clique extensions
+        # without burning the solver's 20k-iteration default per round.
+        sol = solve_mis(g, target=len(remaining), max_iters=200,
+                        seed=seed)
+        picked = {remaining[i] for i in np.flatnonzero(sol)}
+        rounds.append([act[i].tensor for i in
+                       sorted(picked, key=lambda i: -act[i].bytes_per_step)])
+        remaining = [i for i in remaining if i not in picked]
+    if remaining:  # max_rounds exhausted: serialize the tail
+        rounds.extend([[act[i].tensor] for i in remaining])
+    return rounds
 
 
 def _param_bytes(cfg: ModelConfig) -> int:

@@ -1,0 +1,73 @@
+"""Optional-hypothesis shim.
+
+`hypothesis` is a dev nicety, not a hard dependency: when it is missing
+(the tier-1 CPU image does not bake it in), the property tests degrade to
+a small deterministic example sweep instead of failing at collection.
+Test modules import ``given``/``settings``/``st`` from here; with
+hypothesis installed they get the real thing.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A fixed, deduplicated example list standing in for a
+        hypothesis search strategy."""
+
+        def __init__(self, values):
+            self.values = list(dict.fromkeys(values))
+
+    class _StrategiesShim:
+        @staticmethod
+        def integers(min_value=0, max_value=100):
+            lo, hi = int(min_value), int(max_value)
+            span = hi - lo
+            return _Strategy([lo, hi, lo + span // 2, lo + span // 3,
+                              lo + (2 * span) // 3, lo + 1 if span else lo])
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0):
+            lo, hi = float(min_value), float(max_value)
+            return _Strategy([lo, hi, (lo + hi) / 2,
+                              lo + (hi - lo) * 0.25,
+                              lo + (hi - lo) * 0.75])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            vals = elements.values
+            sizes = sorted({min_size, max_size,
+                            (min_size + max_size) // 2})
+            out = [[vals[(k + i) % len(vals)] for i in range(s)]
+                   for k, s in enumerate(sizes)]
+            return _Strategy([tuple(x) for x in out])
+
+    st = _StrategiesShim()
+
+    def settings(**_kwargs):
+        return lambda f: f
+
+    def given(*strategies):
+        """Run the test once per example row: the i-th example of every
+        strategy, cycling shorter example lists."""
+
+        def deco(f):
+            # Zero-arg wrapper (deliberately no functools.wraps: pytest
+            # must not see the wrapped signature as fixture requests).
+            def wrapper():
+                rows = max(len(s.values) for s in strategies)
+                for i in range(rows):
+                    drawn = [s.values[i % len(s.values)]
+                             for s in strategies]
+                    drawn = [list(d) if isinstance(d, tuple) else d
+                             for d in drawn]
+                    f(*drawn)
+
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            return wrapper
+
+        return deco

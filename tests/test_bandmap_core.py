@@ -3,7 +3,7 @@ conflict graph, MIS, validator)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (PAPER_KERNELS, cnkm_name, greedy_mis, make_cnkm,
                         map_dfg, mii, res_mii, schedule_dfg, solve_mis)

@@ -25,8 +25,17 @@ FA_CASES = [
 ]
 
 
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-@pytest.mark.parametrize("case", FA_CASES)
+# One representative (case, dtype) combination stays in the fast tier-1
+# run; the full interpret-mode sweep is `slow` (several minutes of CPU).
+def _sweep(cases, fast_idx=(0,)):
+    return [c if i in fast_idx else pytest.param(c, marks=pytest.mark.slow)
+            for i, c in enumerate(cases)]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32,
+                                   pytest.param(jnp.bfloat16,
+                                                marks=pytest.mark.slow)])
+@pytest.mark.parametrize("case", _sweep(FA_CASES))
 def test_flash_attention_matches_ref(case, dtype):
     b, sq, sk, hq, hkv, d, win, off = case
     ks = jax.random.split(jax.random.PRNGKey(42), 3)
@@ -77,7 +86,7 @@ def _ssd_inputs(case, dtype=jnp.float32):
     return x, dt, a_log, bb, cc
 
 
-@pytest.mark.parametrize("case", SSD_CASES)
+@pytest.mark.parametrize("case", _sweep(SSD_CASES))
 def test_ssd_pallas_matches_ref(case):
     x, dt, a_log, b, c = _ssd_inputs(case)
     chunk, hb = case[5], case[6]
@@ -88,6 +97,7 @@ def test_ssd_pallas_matches_ref(case):
     np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), atol=1e-4)
 
 
+@pytest.mark.slow
 def test_ssd_chunked_matches_recurrence():
     """Chunked scan == naive token-by-token recurrence, any chunking."""
     x, dt, a_log, b, c = _ssd_inputs((2, 32, 4, 8, 16, 8, 2))

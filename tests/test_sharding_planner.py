@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES, get_config, get_smoke_config
@@ -101,6 +101,26 @@ def test_planner_transfer_dfg_uses_paper_rd():
     for v in dfg.v_i:
         assert dfg.rd(v) == len(dfg.successors(v))
         assert dfg.rd(v) in (16,)           # dp-reused weight classes
+
+
+def test_planner_transfer_rounds_partition():
+    """Bandwidth rounds from the bitset MIS engine: every byte-moving
+    transfer appears exactly once, no round reuses a mesh axis, and the
+    round count equals the busiest axis's multiplicity (the contention
+    graph is a union of per-axis cliques)."""
+    from collections import Counter
+    cfg = get_config("mixtral-8x7b")
+    mesh = _fake_mesh({"data": 16, "model": 16})
+    plan = planner_mod.plan(cfg, "train", 4096, 256, mesh)
+    rounds = planner_mod.schedule_transfer_rounds(plan)
+    act = [t for t in plan.transfers if t.bytes_per_step > 0]
+    flat = [name for rnd in rounds for name in rnd]
+    assert sorted(flat) == sorted(t.tensor for t in act)
+    by_name = {t.tensor: t for t in act}
+    for rnd in rounds:
+        axes = [by_name[name].axis for name in rnd]
+        assert len(axes) == len(set(axes))
+    assert len(rounds) == max(Counter(t.axis for t in act).values())
 
 
 def test_planner_optimized_compresses_cross_pod():
