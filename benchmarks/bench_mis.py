@@ -12,6 +12,11 @@ Sections (all written to artifacts/bench/bench_mis.json):
                    The acceptance bar is >= 3x.
   kernel_table   — map wall-time, II, MII, routing PEs per CnKm kernel
                    and mode under the default mapper parameters.
+  straggler      — the BusMap II=MII infeasibility stragglers (C2K8,
+                   C5K5): end-to-end wall time with the certificate +
+                   pressure-edge pipeline, per-certificate stats, and
+                   the wall time of the certificate-less seed pipeline
+                   for comparison.
   cgra_8x8       — end-to-end maps on an 8x8 CGRAConfig, the scenario
                    the dense engine could not reach comfortably
                    (|V_C| > 2000).
@@ -206,6 +211,36 @@ def bench_kernel_table(quick: bool = False) -> list[dict]:
     return rows
 
 
+def bench_stragglers(quick: bool = False) -> list[dict]:
+    """C2K8/C5K5 BusMap end to end: the certificate stages prove every
+    doomed (II, jitter) schedule — all of II=2 plus the II=3 jitters the
+    portfolio used to grind on — unbindable in tens of milliseconds
+    each, instead of spending the full portfolio budget per combination
+    (~40-50 s in the seed engine).  ``seed_wall_s`` re-runs with
+    certificates and pressure edges disabled for an in-place comparison
+    (skipped under --quick)."""
+    rows = []
+    for (n, m) in [(2, 8), (5, 5)]:
+        r = map_dfg(make_cnkm(n, m), CGRAConfig(), mode="busmap")
+        cert_walls = [c.wall_s for c in r.certificates]
+        row = dict(
+            kernel=cnkm_name(n, m), mode="busmap", ok=r.ok, ii=r.ii,
+            mii=r.mii, routing_pes=r.n_routing_pes,
+            wall_s=round(r.wall_s, 3),
+            combos_certified=len(r.certificates),
+            cert_stages=sorted({c.stage for c in r.certificates}),
+            cert_total_s=round(sum(cert_walls), 3),
+            cert_max_s=round(max(cert_walls, default=0.0), 3))
+        if not quick:
+            r_seed = map_dfg(make_cnkm(n, m), CGRAConfig(), mode="busmap",
+                             certify=False, bus_pressure=False)
+            row["seed_wall_s"] = round(r_seed.wall_s, 3)
+            row["speedup"] = round(r_seed.wall_s / max(r.wall_s, 1e-9), 2)
+        print(f"straggler: {row}")
+        rows.append(row)
+    return rows
+
+
 def bench_8x8(quick: bool = False) -> list[dict]:
     """End-to-end maps on an 8x8 PEA — out of reach for the dense path."""
     big = CGRAConfig(rows=8, cols=8)
@@ -227,6 +262,7 @@ def run_all(quick: bool = False) -> dict:
     bench = dict(
         engine_speedup=bench_engine_speedup(quick),
         kernel_table=bench_kernel_table(quick),
+        straggler=bench_stragglers(quick),
         cgra_8x8=bench_8x8(quick),
     )
     os.makedirs(ART, exist_ok=True)

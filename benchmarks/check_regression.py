@@ -1,0 +1,90 @@
+"""Bench-regression gate for CI: diff a fresh ``bench_mis.json`` against
+the committed baseline and fail on a >2x wall-time regression of any
+kernel (kernel_table, straggler and cgra_8x8 rows are all keyed by
+(kernel, mode)).
+
+  python benchmarks/check_regression.py \
+      --baseline /tmp/bench_baseline.json \
+      --fresh artifacts/bench/bench_mis.json [--factor 2.0]
+
+Sub-``--floor``-second entries are compared against the floor instead of
+their raw baseline so scheduler noise on millisecond-scale maps cannot
+trip the gate.  Missing keys on either side are reported but do not fail
+(new kernels appear, old ones retire); a slower-than-2x row does.
+
+The committed baseline is produced on a developer machine while the gate
+runs on shared CI runners, so raw wall-clock comparison would conflate
+machine speed with engine regressions.  The frozen seed-engine solver
+(``engine_speedup.seed_solve_s`` — dense numpy, kept verbatim precisely
+so it never changes with the live engine) is timed in both runs and used
+as a machine-speed reference: budgets are scaled up by
+``fresh_seed_solve / baseline_seed_solve`` when the current machine is
+slower (never tightened when it is faster).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _rows(bench: dict) -> dict[tuple, float]:
+    out = {}
+    for section in ("kernel_table", "straggler", "cgra_8x8"):
+        for row in bench.get(section, []):
+            out[(section, row["kernel"], row["mode"])] = row["wall_s"]
+    return out
+
+
+def check(baseline: dict, fresh: dict, factor: float = 2.0,
+          floor: float = 0.2) -> list[str]:
+    old, new = _rows(baseline), _rows(fresh)
+    scale = 1.0
+    ref_old = baseline.get("engine_speedup", {}).get("seed_solve_s")
+    ref_new = fresh.get("engine_speedup", {}).get("seed_solve_s")
+    if ref_old and ref_new:
+        scale = max(ref_new / ref_old, 1.0)
+        print(f"machine-speed scale (frozen seed solver "
+              f"{ref_old:.2f}s -> {ref_new:.2f}s): x{scale:.2f}")
+    failures = []
+    for key in sorted(old.keys() | new.keys()):
+        section, kernel, mode = key
+        if key not in old or key not in new:
+            side = "baseline" if key not in old else "fresh run"
+            print(f"note: {section}:{kernel}:{mode} missing from {side}")
+            continue
+        budget = factor * scale * max(old[key], floor)
+        status = "FAIL" if new[key] > budget else "ok"
+        print(f"{status}: {section}:{kernel}:{mode} "
+              f"{old[key]:.3f}s -> {new[key]:.3f}s (budget {budget:.3f}s)")
+        if new[key] > budget:
+            failures.append(
+                f"{section}:{kernel}:{mode}: {old[key]:.3f}s -> "
+                f"{new[key]:.3f}s exceeds {factor}x budget")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--factor", type=float, default=2.0)
+    ap.add_argument("--floor", type=float, default=0.2)
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    failures = check(baseline, fresh, args.factor, args.floor)
+    if failures:
+        print("\nbench regression gate FAILED:")
+        for msg in failures:
+            print(" -", msg)
+        return 1
+    print("\nbench regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

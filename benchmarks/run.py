@@ -220,6 +220,11 @@ def bench_mis_engine(quick: bool = False):
             ["seed_build_s", sp["seed_build_s"]],
             ["bitset_solve_s", sp["bitset_solve_s"]],
             ["seed_solve_s", sp["seed_solve_s"]]]
+    for row in bench["straggler"]:
+        rows.append([f"straggler_{row['kernel']}_{row['mode']}_wall_s",
+                     row["wall_s"]])
+        rows.append([f"straggler_{row['kernel']}_{row['mode']}_"
+                     f"cert_total_s", row["cert_total_s"]])
     for row in bench["cgra_8x8"]:
         rows.append([f"map8x8_{row['kernel']}_{row['mode']}_wall_s",
                      row["wall_s"]])

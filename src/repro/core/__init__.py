@@ -4,6 +4,7 @@ allocation) plus the TPU-mesh bandwidth planner built on the same machinery.
 
 from .bandmap import MappingResult, compare_modes, map_dfg
 from .bitset import BitsetGraph
+from .certify import IICertificate, certify_ii_infeasible
 from .cgra import CGRAConfig
 from .dfg import DFG, Edge, Op, OpKind
 from .kernels_cnkm import (EXTRA_KERNELS, PAPER_KERNELS,
@@ -14,6 +15,7 @@ from .tec import TEC
 
 __all__ = [
     "MappingResult", "compare_modes", "map_dfg", "BitsetGraph",
+    "IICertificate", "certify_ii_infeasible",
     "CGRAConfig", "DFG", "Edge", "Op", "OpKind", "EXTRA_KERNELS",
     "PAPER_KERNELS", "all_paper_kernels", "cnkm_name", "make_cnkm",
     "greedy_mis", "solve_mis", "solve_mis_portfolio", "ScheduledDFG",

@@ -14,11 +14,13 @@ import time as _time
 
 import numpy as np
 
+from .certify import IICertificate, certify_ii_infeasible
 from .cgra import CGRAConfig
 from .conflict import (ConflictGraph, Vertex, build_conflict_graph,
                        constructive_init)
 from .dfg import DFG
-from .mis import PortfolioSBTS, ejection_repair, mis_indices
+from .mis import (ROW_CACHE_LIMIT, PortfolioSBTS, ejection_repair,
+                  mis_indices)
 from .schedule import ScheduledDFG, mii, schedule_dfg
 from .validate import ValidationReport, validate_mapping
 
@@ -39,6 +41,10 @@ class MappingResult:
     n_ops: int
     attempts: int
     wall_s: float
+    # II-infeasibility certificates collected along the way (one per
+    # (II, jitter) combination proven unbindable and skipped).
+    certificates: list[IICertificate] = dataclasses.field(
+        default_factory=list)
 
     @property
     def ii_ratio(self) -> float:
@@ -55,14 +61,27 @@ class MappingResult:
 def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
             use_grf: bool | None = None, max_ii: int = 32,
             mis_restarts: int = 10, mis_iters: int = 20000,
-            seed: int = 0) -> MappingResult:
+            seed: int = 0, certify: bool = True,
+            bus_pressure: bool = True,
+            certify_budget: int = 200_000) -> MappingResult:
     """Run the full 4-phase mapping.  Phase 4 (incomplete-mapping
     processing) = MIS restarts with fresh seeds, re-scheduling with jitter
     (ASAP schedules are II-invariant, so jitter supplies the diversity),
-    then II escalation — the retry loop of Fig. 3."""
+    then II escalation — the retry loop of Fig. 3.
+
+    ``certify`` runs the II-infeasibility certificate stages
+    (`core.certify`) on every (II, jitter) schedule before the portfolio:
+    a certified combination is skipped outright (recorded in
+    ``MappingResult.certificates``), and a complete placement found by
+    the exhaustive stage is validated directly, bypassing the portfolio
+    when the validator accepts it.  ``bus_pressure`` folds the provable
+    bus-capacity structure into the conflict graph
+    (`conflict.bus_pressure_edges`).  Both default on; disabling both
+    reproduces the seed pipeline exactly."""
     t_start = _time.perf_counter()
     the_mii = mii(dfg, cgra)
     attempts = 0
+    certificates: list[IICertificate] = []
     last: tuple = (None, None, None, 0, (0, 0))
     for cur_ii in range(the_mii, max_ii + 1):
         for jitter in (0, 1, 2, 3):
@@ -72,8 +91,45 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
                                      jitter=jitter, seed=seed)
             except RuntimeError:
                 continue
-            cg = build_conflict_graph(sched, cgra)
+            cg = build_conflict_graph(sched, cgra,
+                                      bus_pressure=bus_pressure)
             n_ops = len(sched.dfg.ops)
+            # One unpacked-row cache per conflict graph, shared by the
+            # certificate search, the portfolio and the repair retries.
+            shared_u8 = cg.bits.rows_u8(np.arange(cg.n)) \
+                if 0 < cg.n * cg.n <= ROW_CACHE_LIMIT else None
+            if certify:
+                cert, csp_sol = certify_ii_infeasible(
+                    cg, sched, cgra, jitter=jitter,
+                    node_budget=certify_budget, row_cache=shared_u8)
+                if cert is not None:
+                    # Proven unbindable: skip the whole portfolio budget
+                    # for this (II, jitter) combination.
+                    certificates.append(cert)
+                    if last[0] is None:
+                        last = (sched, None, None, 0, (cg.n, cg.n_edges))
+                    continue
+                if csp_sol is not None:
+                    # The exhaustive stage found a complete conflict-free
+                    # placement — try it on the validator before paying
+                    # for the portfolio.
+                    attempts += 1
+                    placement = {cg.vertices[i].op: cg.vertices[i]
+                                 for i in mis_indices(csp_sol)}
+                    report = validate_mapping(sched, cgra, placement)
+                    last = (sched, placement, report, n_ops,
+                            (cg.n, cg.n_edges))
+                    if report.ok:
+                        return MappingResult(
+                            ok=True, mode=mode, ii=cur_ii, mii=the_mii,
+                            n_routing_pes=sched.n_routing_ops,
+                            ports_per_vio=dict(sched.ports_allocated),
+                            placement=placement, sched=sched,
+                            report=report, cg_size=(cg.n, cg.n_edges),
+                            mis_size=n_ops, n_ops=n_ops,
+                            attempts=attempts,
+                            wall_s=_time.perf_counter() - t_start,
+                            certificates=certificates)
             # Spend extra effort at II = MII: throughput is the top concern
             # (paper §III-A), so a success there dominates any II+1 mapping.
             budget = mis_restarts * (2 if cur_ii == the_mii else 1)
@@ -85,11 +141,12 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
             inits = [constructive_init(cg, sched, cgra, seed=base + k)
                      if k % 3 != 2 else None for k in range(budget)]
             attempts += budget
-            sbts = PortfolioSBTS(cg.bits, inits, seed=base)
-            # Shared unpacked-row cache for the repair attempts; when the
-            # solver skipped its cache (graph too big), materialise one
-            # lazily so the retries don't each re-unpack n² rows.
-            row_cache = sbts._u8
+            sbts = PortfolioSBTS(cg.bits, inits, seed=base,
+                                 row_cache=shared_u8)
+            # Repair retries reuse the same cache; when the graph was too
+            # big for it, row_cache() materialises one lazily so the
+            # retries don't each re-unpack n² rows.
+            row_cache = shared_u8
             op_of = np.fromiter((v.op for v in cg.vertices),
                                 dtype=np.int64, count=cg.n)
             seen_sols: set[bytes] = set()
@@ -121,7 +178,7 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
                         # retries differ).
                         rs = base + rnd * 97 + int(k)
                         if row_cache is None:
-                            row_cache = cg.bits.rows_u8(np.arange(cg.n))
+                            row_cache = sbts.row_cache()
                         for rk in range(6):
                             fixed = ejection_repair(
                                 cg.bits, sol, cg.op_vertices, op_of,
@@ -150,7 +207,8 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
                             placement=placement, sched=sched,
                             report=report, cg_size=(cg.n, cg.n_edges),
                             mis_size=size, n_ops=n_ops, attempts=attempts,
-                            wall_s=_time.perf_counter() - t_start)
+                            wall_s=_time.perf_counter() - t_start,
+                            certificates=certificates)
                 if remaining <= 0:
                     break
                 # Alternate a local diversification with a fully fresh
@@ -172,7 +230,8 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
         placement=placement or {}, sched=sched, report=report,
         cg_size=cg_size, mis_size=size,
         n_ops=len(sched.dfg.ops) if sched else 0, attempts=attempts,
-        wall_s=_time.perf_counter() - t_start)
+        wall_s=_time.perf_counter() - t_start,
+        certificates=certificates)
 
 
 def compare_modes(dfg: DFG, cgra: CGRAConfig, *, seed: int = 0,

@@ -30,6 +30,12 @@ class CGRAConfig:
     cols: int = 4               # M: PEs per IBUS
     lrf: int = 8                # local register file capacity per PE
     grf: int = 0                # global register file capacity (0 = absent)
+    # Physical buses per row/column scope (DESIGN.md §3: bus 0 is the
+    # hardwired IBUS_r / OBUS_c, bus 1 the PE-driven routing bus).  The
+    # single source of truth for bus capacity — tec.py::buses, the
+    # validator's assignment search and the conflict graph's bus-pressure
+    # edges all read it from here.
+    buses_per_scope: int = 2
 
     @property
     def n_pes(self) -> int:

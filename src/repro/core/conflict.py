@@ -28,6 +28,20 @@ Flexible bus-index assignment (which of the two row/column buses carries a
 PE→PE transfer, and in which cycle) is resolved after MIS by the validator
 (`validate.py`) — a pairwise conflict graph cannot express those capacity-2
 constraints exactly; the paper's phase-4 retry loop covers the same gap.
+
+`bus_pressure_edges` (flag-gated in :func:`build_conflict_graph`, enabled
+by the `bandmap.map_dfg` pipeline) folds the *provable* part of that
+validator structure back into the pairwise graph: schedule-level facts pin
+some bus cells as occupied in **every** complete placement (all input
+ports bus-driven at a slot ⇒ every IBUS_r bus 0 taken; all output ports
+exporting at a slot ⇒ every OBUS_c bus 0 taken), and a routing op with a
+consumer scheduled in its own modulo slot can never co-locate with that
+consumer, so it must drive its bus within a schedule-fixed window.  When
+the surviving (bus, cycle) cells for such a forced drive are exhausted or
+collapse to a single cell contested by another forced driver, the
+corresponding pair is infeasible in every complete placement and becomes a
+regular conflict edge — SBTS stops proposing placements `_assign_buses`
+is guaranteed to reject, without ever excluding a validatable placement.
 """
 
 from __future__ import annotations
@@ -124,7 +138,13 @@ def _dep_ok(prod: Vertex, cons: Vertex) -> bool:
 
 
 def build_conflict_graph(sched: ScheduledDFG, cgra: CGRAConfig,
-                         use_kernel: bool = False) -> ConflictGraph:
+                         use_kernel: bool = False,
+                         bus_pressure: bool = False) -> ConflictGraph:
+    """Build the mixed conflict graph.  With ``bus_pressure=False``
+    (default) the adjacency is byte-identical to the seed formulation
+    (`dense_conflicts_python` + `_dep_ok`); ``bus_pressure=True``
+    additionally folds the provable bus-capacity structure in via
+    :func:`bus_pressure_edges` (the pipeline default — see map_dfg)."""
     dfg, ii = sched.dfg, sched.ii
     vertices: list[Vertex] = []
     op_vertices: dict[int, list[int]] = {}
@@ -183,7 +203,150 @@ def build_conflict_graph(sched: ScheduledDFG, cgra: CGRAConfig,
     # over the producer x consumer candidate block.
     _add_dep_conflicts(bits, vertices, op_vertices, dfg)
 
+    if bus_pressure:
+        bus_pressure_edges(bits, vertices, op_vertices, sched, cgra)
+
     return ConflictGraph(vertices, bits, op_vertices, len(dfg.ops))
+
+
+def _forced_drive_slots(sched, oid: int, m: int) -> list[int] | None:
+    """Modulo slots available to the mandatory bus drive of routing op
+    ``oid`` (scheduled in slot ``m``), or ``None`` when no drive is
+    provably required.
+
+    A consumer scheduled in the same modulo slot can never share the
+    route's PE (PE-instance occupancy), and routed producers reach
+    non-co-located consumers only over their driven bus (no neighbour
+    link), so at least one drive is forced.  Per-edge drive windows are
+    schedule-fixed ([ready, use] clipped to one II) and all start at the
+    route's ready cycle, so the nested windows always share a stab cycle:
+    one broadcast drive inside the intersection serves every forced
+    listener — the forced demand is exactly one drive in the slots of
+    ``[t_ready, min over forced edges of window-end]``."""
+    dfg, ii = sched.dfg, sched.ii
+    t_ready = sched.time[oid] + dfg.ops[oid].latency
+    hi = None
+    for e in dfg.out_edges(oid):
+        if dfg.ops[e.dst].kind == OpKind.VOUT:
+            continue  # exports ride the VOO's own fixed OBUS drive
+        t_use = sched.time[e.dst] + e.distance * ii
+        if t_use % ii != m or t_use < t_ready:
+            continue
+        end = min(t_use, t_ready + ii - 1)
+        hi = end if hi is None else min(hi, end)
+    if hi is None:
+        return None
+    return sorted({t % ii for t in range(t_ready, hi + 1)})
+
+
+def bus_pressure_edges(bits: BitsetGraph, vertices, op_vertices,
+                       sched: ScheduledDFG, cgra: CGRAConfig) -> int:
+    """Fold the provable bus-capacity structure into the pairwise graph.
+
+    Every added edge is *sound with respect to complete placements*: if
+    both endpoints are selected and every op receives some placement, the
+    validator's `_assign_buses` is guaranteed to fail.  Three ingredients:
+
+    1. **Saturated cells.**  If every input port at slot ``m`` carries a
+       bus-mode VIO, the ports cover all rows, so every ``(ROW, r, 0, m)``
+       cell is driven in any complete placement; likewise all VOO exports
+       at a slot saturate ``(COL, c, 0, m)`` for every column.
+    2. **Forced drives.**  A routing-op vertex whose op has a consumer in
+       its own modulo slot must place one broadcast drive in a
+       schedule-fixed window (see `_forced_drive_slots`).
+    3. **Cell exhaustion.**  Subtracting (1) from a forced drive's
+       ``buses_per_scope × window`` cell grid leaves its feasible cells.
+       No cell left ⇒ the route vertex is infeasible against *every*
+       candidate of its same-slot consumers (they can never co-locate).
+       Exactly one cell left ⇒ two such vertices of different ops pinned
+       to the same cell (or a port tuple hard-wired to it) are mutually
+       exclusive — drives of distinct producers never share a
+       (bus, cycle).
+
+    Returns the number of vertex pairs added (0 when the schedule has no
+    provable pressure — the common case on loose instances, where the
+    graph stays byte-identical to the oracle rules).
+    """
+    dfg, ii = sched.dfg, sched.ii
+    n_buses = cgra.buses_per_scope
+
+    # --- 1. schedule-level saturation of the hardwired bus-0 cells ----
+    vin_bus = [0] * ii
+    vout = [0] * ii
+    for oid, op in dfg.ops.items():
+        m = sched.time[oid] % ii
+        if op.kind == OpKind.VIN and sched.delivery.get(oid, "bus") == "bus":
+            vin_bus[m] += 1
+        elif op.kind == OpKind.VOUT:
+            vout[m] += 1
+    sat = {ROW: [vin_bus[m] >= cgra.rows for m in range(ii)],
+           COL: [vout[m] >= cgra.cols for m in range(ii)]}
+
+    # --- 2. forced drives per routing op --------------------------------
+    forced_slots: dict[int, list[int]] = {}
+    forced_consumers: dict[int, list[int]] = {}
+    for oid, op in dfg.ops.items():
+        if op.kind != OpKind.ROUTE:
+            continue
+        m = sched.time[oid] % ii
+        slots = _forced_drive_slots(sched, oid, m)
+        if slots is None:
+            continue
+        forced_slots[oid] = slots
+        forced_consumers[oid] = [
+            e.dst for e in dfg.out_edges(oid)
+            if dfg.ops[e.dst].kind != OpKind.VOUT
+            and (sched.time[e.dst] + e.distance * ii) % ii == m]
+
+    # --- 3. cell exhaustion ---------------------------------------------
+    n_pairs = 0
+    pinned: dict[tuple, list[int]] = {}   # (scope, idx, bus, slot) -> verts
+    dead: list[tuple[int, int]] = []      # (vertex, doomed consumer op)
+    for oid, slots in forced_slots.items():
+        for vi in op_vertices[oid]:
+            v = vertices[vi]
+            if v.drive is None:
+                continue
+            scope, idx = v.drive
+            cells = [(k, s) for k in range(n_buses) for s in slots
+                     if not (k == 0 and sat[scope][s])]
+            if not cells:
+                dead.extend((vi, c) for c in forced_consumers[oid])
+            elif len(cells) == 1:
+                k, s = cells[0]
+                pinned.setdefault((scope, idx, k, s), []).append(vi)
+
+    if dead:
+        src = []
+        dst = []
+        for vi, cons_op in dead:
+            for wj in op_vertices[cons_op]:
+                src.append(vi)
+                dst.append(wj)
+        bits.add_edges(np.asarray(src), np.asarray(dst))
+        n_pairs += len(src)
+
+    # Port tuples hard-wired to a contested cell (only reachable when
+    # buses_per_scope == 1, but kept general).
+    fixed_cell: dict[tuple, list[int]] = {}
+    for v in vertices:
+        if v.kind == TIN and v.mode == "bus":
+            fixed_cell.setdefault((ROW, v.port, 0, v.m), []).append(v.idx)
+        elif v.kind == TOUT:
+            fixed_cell.setdefault((COL, v.port, 0, v.m), []).append(v.idx)
+
+    cliques = []
+    for cell, vis in pinned.items():
+        group = vis + fixed_cell.get(cell, [])
+        ops_in = {vertices[i].op for i in group}
+        if len(ops_in) > 1:
+            cliques.append(group)
+            n_pairs += len(group) * (len(group) - 1) // 2
+    for group in cliques:
+        bits.add_clique(group)
+    if cliques:
+        bits.clear_diagonal()
+    return n_pairs
 
 
 def bitset_group_conflicts(vertices, op_vertices, ii: int) -> BitsetGraph:

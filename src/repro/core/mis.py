@@ -30,6 +30,10 @@ import numpy as np
 
 from .bitset import BitsetGraph, as_bitset_graph, pack_bool
 
+# Unpacked-row caches ([n, n] uint8) are materialised only below this
+# byte bound; larger graphs fall back to per-move unpack.
+ROW_CACHE_LIMIT = 1 << 25
+
 
 def greedy_mis(adj, rng: np.random.Generator) -> np.ndarray:
     """Randomized min-degree construction; returns a maximal IS."""
@@ -62,7 +66,7 @@ class PortfolioSBTS:
     """
 
     def __init__(self, g: BitsetGraph, inits, *, tenure: int = 7,
-                 seed: int = 0):
+                 seed: int = 0, row_cache: np.ndarray | None = None):
         self.g = g
         self.k = len(inits)
         self.tenure = tenure
@@ -97,11 +101,28 @@ class PortfolioSBTS:
         self._pool_uses = 0
         self._stride = 0   # drawn (coprime to n) at the first _draw
         # Unpacked 0/1 row cache for delta updates: one unpackbits of the
-        # whole packed adjacency, after which each move's row fetch is a
-        # fancy gather.  Bounded to 32 MiB; beyond that, rows are unpacked
-        # per move (still O(n/8) traffic).
-        self._u8 = g.rows_u8(np.arange(n)) if 0 < n * n <= (1 << 25) \
-            else None
+        # whole packed adjacency (or a caller-shared one, e.g. the
+        # certificate stage's), after which each move's row fetch is a
+        # fancy gather.  Bounded to 32 MiB; beyond that, rows are
+        # unpacked per move (still O(n/8) traffic).
+        if row_cache is not None:
+            self._u8 = row_cache
+        else:
+            self._u8 = g.rows_u8(np.arange(n)) \
+                if 0 < n * n <= ROW_CACHE_LIMIT else None
+        self._u8_ext: np.ndarray | None = None  # row_cache() overflow copy
+
+    def row_cache(self) -> np.ndarray:
+        """Unpacked 0/1 adjacency ``uint8 [n, n]``, shared with callers
+        (e.g. ejection-repair retries).  When the constructor skipped the
+        cache (graph beyond the 32 MiB bound), materialise it lazily here
+        so the solver's per-move path keeps its per-move unpack policy
+        while one-shot consumers still get a single unpack."""
+        if self._u8 is not None:
+            return self._u8
+        if self._u8_ext is None:
+            self._u8_ext = self.g.rows_u8(np.arange(self.g.n))
+        return self._u8_ext
 
     def _rows(self, vs: np.ndarray) -> np.ndarray:
         return self._u8[vs] if self._u8 is not None else self.g.rows_u8(vs)
@@ -347,27 +368,36 @@ def ejection_repair(adj, in_s: np.ndarray,
     u8 = row_cache if row_cache is not None else (
         g.rows_u8(np.arange(g.n)) if g.n
         else np.zeros((0, 0), dtype=np.uint8))
+    doms = {op: np.asarray(ids, dtype=np.int64)
+            for op, ids in op_vertices.items()}
+    banned = np.zeros(g.n, dtype=bool)
     nodes = [0]  # search-node budget (keeps worst-case bounded)
 
-    def place(op: int, d: int, banned: set[int]) -> bool:
+    def place(op: int, d: int) -> bool:
         nonlocal conf
         nodes[0] += 1
         if nodes[0] > 20000:
             return False
-        cands = [v for v in op_vertices[op] if not in_s[v] and v not in banned]
-        rng.shuffle(cands)
-        # Prefer fewest evictions.
-        cands.sort(key=lambda v: conf[v])
-        for v in cands:
-            if conf[v] == 0:
+        # Batched candidate scoring over the row cache: one gather gives
+        # every alive candidate's current conflict count; a random key
+        # added before the stable argsort is the vectorised equivalent of
+        # shuffle-then-sort (fewest evictions first, random tie-break).
+        dom = doms[op]
+        alive = dom[~(in_s[dom] | banned[dom])]
+        if alive.size == 0:
+            return False
+        order = np.argsort(conf[alive] + rng.random(alive.size),
+                           kind="stable")
+        cands = alive[order]
+        n_evict = conf[cands]
+        for v, ne in zip(cands, n_evict):
+            if ne == 0:
                 in_s[v] = True
                 conf += u8[v]
                 return True
-            if d == 0:
+            if d == 0 or ne > 2:
                 continue
             evict = np.flatnonzero(u8[v] & in_s)
-            if len(evict) > 2:
-                continue
             evicted_ops = [int(op_of[u]) for u in evict]
             # Snapshot: recursive placements mutate state and `all` short-
             # circuits, so restore wholesale on failure.
@@ -377,9 +407,11 @@ def ejection_repair(adj, in_s: np.ndarray,
                 conf -= u8[u]
             in_s[v] = True
             conf += u8[v]
-            nb_banned = banned | {v}
-            if all(place(eo, d - 1, nb_banned) for eo in evicted_ops):
+            banned[v] = True
+            if all(place(eo, d - 1) for eo in evicted_ops):
+                banned[v] = False
                 return True
+            banned[v] = False
             in_s[:] = in_s_snap
             conf = conf_snap
         return False
@@ -387,7 +419,7 @@ def ejection_repair(adj, in_s: np.ndarray,
     placed_ops = {int(op_of[v]) for v in np.flatnonzero(in_s)}
     for op in op_vertices:
         if op not in placed_ops:
-            if place(op, depth, set()):
+            if place(op, depth):
                 placed_ops.add(op)
     assert not g.any_conflict(pack_bool(in_s)), "repair broke independence"
     return in_s

@@ -46,7 +46,7 @@ class TEC:
 
     def buses(self, scope: str, idx: int) -> list[tuple[str, int, int]]:
         """All physical buses of a row/column scope."""
-        return [(scope, idx, k) for k in range(2)]
+        return [(scope, idx, k) for k in range(self.cgra.buses_per_scope)]
 
     @staticmethod
     def reachable(src: tuple[int, int], dst: tuple[int, int]) -> bool:

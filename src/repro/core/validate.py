@@ -35,6 +35,7 @@ class ValidationReport:
 
 
 def _assign_buses(transfers: list, fixed_used: set, ii: int,
+                  n_buses: int = 2,
                   n_restarts: int = 6) -> tuple[dict, list[str]]:
     """Concrete (bus, cycle) allocation for PE->PE transfers.
 
@@ -79,7 +80,8 @@ def _assign_buses(transfers: list, fixed_used: set, ii: int,
         while pending:
             def opts(dm):
                 (scope, idx), _, slots = dm
-                return [(scope, idx, k, s) for k in range(2) for s in slots
+                return [(scope, idx, k, s)
+                        for k in range(n_buses) for s in slots
                         if (scope, idx, k, s) not in used]
             pending.sort(key=lambda dm: len(opts(dm)))
             dm = pending.pop(0)
@@ -183,7 +185,8 @@ def validate_mapping(sched: ScheduledDFG, cgra: CGRAConfig,
         window = list(range(t_ready, min(t_use, t_ready + ii - 1) + 1))
         transfers.append((e.src, e.dst, scopes, window))
 
-    assignment, bus_viol = _assign_buses(transfers, fixed_used, ii)
+    assignment, bus_viol = _assign_buses(transfers, fixed_used, ii,
+                                         n_buses=cgra.buses_per_scope)
     viol.extend(bus_viol)
 
     # ---- 3. LRF capacity --------------------------------------------------
@@ -237,7 +240,11 @@ def validate_mapping(sched: ScheduledDFG, cgra: CGRAConfig,
     for oid, v in placement.items():
         if v.kind == TIN and v.mode == "grf":
             t0 = sched.time[oid]
-            t1 = max((sched.time[s] for s in dfg.successors(oid)), default=t0)
+            # Park until the last *use*, which for an inter-iteration
+            # consumer is e.distance * ii cycles past its scheduled slot
+            # (same per-edge accounting as the LRF path above).
+            t1 = max((sched.time[e.dst] + e.distance * ii
+                      for e in dfg.out_edges(oid)), default=t0)
             for s, c in _interval_slots(t0, t1, ii).items():
                 grf_slots[s] = grf_slots.get(s, 0) + c
     if grf_slots:

@@ -1,0 +1,187 @@
+"""II-infeasibility certificates (core/certify.py): stage soundness on
+constructed instances, exactness against brute force, and the end-to-end
+behaviour on the paper kernels (the BusMap II=MII stragglers certify in
+well under a second instead of burning the portfolio budget)."""
+
+import itertools
+import types
+
+import numpy as np
+import pytest
+
+from repro.core import (BitsetGraph, certify_ii_infeasible, make_cnkm,
+                        map_dfg, schedule_dfg)
+from repro.core.certify import (_clique_merge_bound, _resource_count_bound,
+                                _search_complete, _symmetry_attrs)
+from repro.core.cgra import CGRAConfig
+from repro.core.conflict import build_conflict_graph
+from repro.core.dfg import DFG, OpKind
+from repro.core.schedule import ScheduledDFG
+
+CGRA = CGRAConfig()
+
+
+def _mini_cg(n, op_vertices, edges):
+    """Duck-typed conflict graph for unit-testing the certificate stages."""
+    g = BitsetGraph(n)
+    for ids in op_vertices.values():
+        g.add_clique(ids)
+    for i, j in edges:
+        g.add_edge(i, j)
+    g.clear_diagonal()
+    return types.SimpleNamespace(n=n, bits=g, op_vertices=op_vertices)
+
+
+# --------------------------------------------------------------- stage 1
+def test_resource_count_bound_fires_on_overpacked_schedule():
+    d = DFG()
+    vouts = [d.add_op(OpKind.VOUT) for _ in range(5)]   # 5 VOOs, 4 OPORTs
+    sched = ScheduledDFG(d, 1, 1, {v: 0 for v in vouts}, {}, {})
+    assert "oport" in _resource_count_bound(sched, CGRA)
+
+
+def test_resource_count_bound_silent_on_scheduler_output():
+    sched = schedule_dfg(make_cnkm(2, 6), CGRA, mode="busmap")
+    assert _resource_count_bound(sched, CGRA) is None
+
+
+# --------------------------------------------------------------- stage 2
+def test_clique_merge_bound_fires_on_mutually_exclusive_ops():
+    # ops {0,1} x {2,3}: every cross pair conflicts -> one clique.
+    cg = _mini_cg(4, {0: [0, 1], 1: [2, 3]},
+                  [(0, 2), (0, 3), (1, 2), (1, 3)])
+    assert _clique_merge_bound(cg) is not None
+
+
+def test_clique_merge_bound_silent_when_one_pair_is_free():
+    cg = _mini_cg(4, {0: [0, 1], 1: [2, 3]}, [(0, 2), (0, 3), (1, 2)])
+    assert _clique_merge_bound(cg) is None
+
+
+# --------------------------------------------------------------- stage 3
+@pytest.mark.parametrize("seed", range(8))
+def test_search_complete_matches_brute_force(seed):
+    """Exact verdicts on random small CSPs vs itertools enumeration."""
+    rng = np.random.default_rng(seed)
+    k, d = 5, 3
+    n = k * d
+    op_vertices = {o: list(range(o * d, (o + 1) * d)) for o in range(k)}
+    cross = [(i, j) for i in range(n) for j in range(i + 1, n)
+             if i // d != j // d]
+    picked = [cross[t] for t in
+              rng.choice(len(cross), size=int(0.35 * len(cross)),
+                         replace=False)]
+    cg = _mini_cg(n, op_vertices, picked)
+    adj = cg.bits.to_dense()
+    brute = any(
+        all(not adj[a, b] for a, b in itertools.combinations(combo, 2))
+        for combo in itertools.product(*op_vertices.values()))
+    verdict, placement, nodes = _search_complete(cg, node_budget=10 ** 6)
+    assert verdict is brute
+    if verdict:
+        idx = np.flatnonzero(placement)
+        assert len(idx) == k
+        assert not adj[np.ix_(idx, idx)].any()
+
+
+def test_search_complete_respects_budget():
+    cg = _mini_cg(4, {0: [0, 1], 1: [2, 3]}, [])
+    verdict, placement, nodes = _search_complete(cg, node_budget=0)
+    assert verdict is None and placement is None
+
+
+# -------------------------------------------------------------- symmetry
+@pytest.mark.parametrize("n,m,mode,ii,jitter",
+                         [(2, 8, "busmap", 2, 0), (2, 8, "busmap", 2, 3),
+                          (2, 6, "busmap", 2, 0)])
+def test_symmetry_verdicts_match_plain_search(n, m, mode, ii, jitter):
+    """Orbit-representative pruning never changes the verdict: the
+    row/column-permutation group is verified per instance, and the
+    symmetric and plain exhaustive searches agree (infeasible and
+    feasible cases)."""
+    sched = schedule_dfg(make_cnkm(n, m), CGRA, mode=mode, ii=ii,
+                         max_ii=ii, jitter=jitter)
+    cg = build_conflict_graph(sched, CGRA, bus_pressure=True)
+    v_sym, p_sym, n_sym = _search_complete(cg, 10 ** 6, cgra=CGRA)
+    v_plain, _, n_plain = _search_complete(cg, 10 ** 6)
+    assert v_sym == v_plain
+    assert n_sym <= n_plain
+    if v_sym:
+        idx = np.flatnonzero(p_sym)
+        assert not cg.bits.to_dense()[np.ix_(idx, idx)].any()
+
+
+def test_symmetry_guard_rejects_perturbed_graph():
+    """A graph that is not invariant under the row/column transpositions
+    (here: one extra asymmetric edge) fails the per-instance
+    verification and falls back to the plain search."""
+    sched = schedule_dfg(make_cnkm(2, 6), CGRA, mode="busmap")
+    cg = build_conflict_graph(sched, CGRA)
+    u8 = cg.bits.rows_u8(np.arange(cg.n)).astype(np.int16)
+    assert _symmetry_attrs(cg, CGRA, u8) is not None
+    quads = [v.idx for v in cg.vertices
+             if v.kind == "quad" and v.pe == (0, 0)]
+    others = [v.idx for v in cg.vertices
+              if v.kind == "quad" and v.pe == (1, 1)
+              and v.op != cg.vertices[quads[0]].op]
+    cg.bits.add_edge(quads[0], others[0])
+    u8 = cg.bits.rows_u8(np.arange(cg.n)).astype(np.int16)
+    assert _symmetry_attrs(cg, CGRA, u8) is None
+
+
+# ------------------------------------------------------------ end-to-end
+@pytest.mark.parametrize("n,m", [(2, 8), (5, 5)])
+def test_certifies_busmap_ii2_infeasible(n, m):
+    """The ROADMAP stragglers: II=MII=2 BusMap binding is *proven*
+    impossible instead of searched for 10+ seconds."""
+    sched = schedule_dfg(make_cnkm(n, m), CGRA, mode="busmap", ii=2,
+                         max_ii=2)
+    cg = build_conflict_graph(sched, CGRA, bus_pressure=True)
+    cert, placement = certify_ii_infeasible(cg, sched, CGRA)
+    assert cert is not None and placement is None
+    assert cert.stage == "exhausted"
+    assert cert.ii == 2
+    assert cert.wall_s < 2.0          # ms-scale in practice; slack for CI
+
+
+@pytest.mark.parametrize("n,m,mode,ii", [(2, 6, "busmap", 2),
+                                         (3, 6, "bandmap", 2),
+                                         (4, 4, "busmap", 1)])
+def test_no_certificate_on_feasible_schedules(n, m, mode, ii):
+    """Feasible (II, jitter) combinations never produce a certificate and
+    the exhaustive stage returns a genuinely independent placement."""
+    sched = schedule_dfg(make_cnkm(n, m), CGRA, mode=mode, ii=ii,
+                         max_ii=ii)
+    cg = build_conflict_graph(sched, CGRA, bus_pressure=True)
+    cert, placement = certify_ii_infeasible(cg, sched, CGRA)
+    assert cert is None
+    assert placement is not None
+    idx = np.flatnonzero(placement)
+    assert len(idx) == len(sched.dfg.ops)
+    ops = {cg.vertices[i].op for i in idx}
+    assert ops == set(sched.dfg.ops)
+    adj = cg.bits.to_dense()
+    assert not adj[np.ix_(idx, idx)].any()
+
+
+def test_map_dfg_records_certificates():
+    """With max_ii pinned at the certified-infeasible level, map_dfg
+    returns failure with one certificate per (II, jitter) combination
+    and never spends the portfolio budget."""
+    r = map_dfg(make_cnkm(5, 5), CGRA, mode="busmap", max_ii=2)
+    assert not r.ok
+    assert len(r.certificates) == 4
+    assert {c.jitter for c in r.certificates} == {0, 1, 2, 3}
+    assert all(c.ii == 2 for c in r.certificates)
+    assert r.attempts == 0            # no portfolio budget spent
+    assert r.wall_s < 5.0
+
+
+def test_map_dfg_flags_reproduce_seed_pipeline():
+    """certify=False + bus_pressure=False is the seed pipeline; outcomes
+    agree with the default (certified) pipeline on a quick kernel."""
+    ref = map_dfg(make_cnkm(2, 6), CGRA, mode="busmap",
+                  certify=False, bus_pressure=False)
+    new = map_dfg(make_cnkm(2, 6), CGRA, mode="busmap")
+    assert (ref.ok, ref.ii, ref.n_routing_pes) == \
+        (new.ok, new.ii, new.n_routing_pes) == (True, 2, 2)

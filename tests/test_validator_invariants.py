@@ -1,0 +1,231 @@
+"""Validator invariants and the bus-pressure conflict edges.
+
+Three pillars:
+
+1. **Replay** — for every accepted mapping on the quick paper kernels,
+   re-play the returned ``bus_assignment`` against the fixed VIO/VOO
+   drives and assert at most one driver per (bus, cycle), with every
+   drive inside its edge's schedule window.
+2. **No false conflicts** — bus-pressure edges are a *subset* of what
+   `_assign_buses` rejects: an accepted mapping found without pressure
+   edges never contains both endpoints of a pressure edge, and with the
+   flag off the adjacency is byte-identical to the dense oracle rules.
+3. **Capacity is config** — `CGRAConfig.buses_per_scope` is the single
+   source of truth: a constructed two-router scenario saturating the
+   OBUS cells is rejected at capacity 2 (and pairwise-forbidden by the
+   pressure edges), and accepted — with the pressure edges dissolving —
+   at capacity 3.
+
+Plus the GRF-residency regression: a distance>=1 consumer of a
+GRF-parked VIO extends the park window by distance * II cycles.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import make_cnkm, map_dfg, schedule_dfg
+from repro.core.cgra import CGRAConfig
+from repro.core.conflict import (QUAD, TIN, TOUT, Vertex, _dep_ok,
+                                 build_conflict_graph,
+                                 dense_conflicts_python)
+from repro.core.dfg import DFG, OpKind
+from repro.core.schedule import ScheduledDFG
+from repro.core.tec import COL, ROW, TEC
+from repro.core.validate import validate_mapping
+
+CGRA = CGRAConfig()
+QUICK = [(1, 2), (2, 4), (2, 6), (3, 6), (4, 4)]
+
+
+def _fixed_drives(placement):
+    used = {}
+    for oid, v in placement.items():
+        if v.kind == TIN and v.mode == "bus":
+            used[(ROW, v.port, 0, v.m)] = ("vio", oid)
+        elif v.kind == TOUT:
+            used[(COL, v.port, 0, v.m)] = ("voo", oid)
+    return used
+
+
+def _replay_bus_assignment(r, cgra):
+    """Assert <=1 driver per (bus, cycle) incl. fixed drives, and every
+    flexible drive inside its edge's schedule window and scope."""
+    sched, placement = r.sched, r.placement
+    ii = sched.ii
+    used = _fixed_drives(placement)
+    assert len(used) == sum(
+        1 for v in placement.values()
+        if (v.kind == TIN and v.mode == "bus") or v.kind == TOUT), \
+        "fixed VIO/VOO drives collide"
+    driver_of = {}
+    for (src, dst), key in r.report.bus_assignment.items():
+        scope, idx, k, slot = key
+        assert 0 <= k < cgra.buses_per_scope
+        assert key not in used, f"flexible drive collides with fixed {key}"
+        # one driver per (bus, cycle): a key may be shared only as the
+        # broadcast of a single producer
+        assert driver_of.setdefault(key, src) == src, \
+            f"two producers drive {key}"
+        pv, cv = placement[src], placement[dst]
+        t_ready = sched.time[src] + sched.dfg.ops[src].latency
+        t_use = sched.time[dst] + next(
+            e.distance for e in sched.dfg.edges
+            if e.src == src and e.dst == dst) * ii
+        window = range(t_ready, min(t_use, t_ready + ii - 1) + 1)
+        assert slot in {t % ii for t in window}
+        if pv.drive is not None:
+            assert (scope, idx) == pv.drive
+        else:
+            assert (scope, idx) in {(ROW, pv.pe[0]), (COL, pv.pe[1])}
+            assert (idx == cv.pe[0] if scope == ROW else idx == cv.pe[1])
+
+
+@pytest.mark.parametrize("mode", ["bandmap", "busmap"])
+@pytest.mark.parametrize("n,m", QUICK)
+def test_accepted_mappings_replay(n, m, mode):
+    r = map_dfg(make_cnkm(n, m), CGRA, mode=mode)
+    assert r.ok
+    _replay_bus_assignment(r, CGRA)
+
+
+@pytest.mark.parametrize("n,m,mode", [(2, 6, "busmap"), (3, 6, "busmap"),
+                                      (2, 8, "bandmap")])
+def test_pressure_edges_not_in_accepted_mappings(n, m, mode):
+    """An accepted mapping found WITHOUT pressure edges never selects
+    both endpoints of a pressure edge (no false conflicts)."""
+    r = map_dfg(make_cnkm(n, m), CGRA, mode=mode, bus_pressure=False)
+    assert r.ok
+    sched = r.sched
+    cg_off = build_conflict_graph(sched, CGRA, bus_pressure=False)
+    cg_on = build_conflict_graph(sched, CGRA, bus_pressure=True)
+    added = cg_on.bits.to_dense() & ~cg_off.bits.to_dense()
+    sel = np.zeros(cg_on.n, dtype=bool)
+    vert_idx = {(v.op, v.kind, v.port, v.mode, v.pe, v.drive): v.idx
+                for v in cg_on.vertices}
+    for oid, v in r.placement.items():
+        sel[vert_idx[(v.op, v.kind, v.port, v.mode, v.pe, v.drive)]] = True
+    assert not added[np.ix_(sel, sel)].any()
+
+
+@pytest.mark.parametrize("n,m,mode", [(2, 6, "busmap"), (5, 5, "busmap"),
+                                      (2, 8, "bandmap")])
+def test_adjacency_byte_identical_with_pressure_disabled(n, m, mode):
+    """Flag off => byte-equal to the dense oracle rules (group cliques +
+    dependency realizability), the seed formulation."""
+    sched = schedule_dfg(make_cnkm(n, m), CGRA, mode=mode)
+    cg = build_conflict_graph(sched, CGRA, bus_pressure=False)
+    ref = dense_conflicts_python(cg.vertices, cg.op_vertices, sched.ii)
+    for src, dst in {(e.src, e.dst) for e in sched.dfg.edges}:
+        for i in cg.op_vertices[src]:
+            for j in cg.op_vertices[dst]:
+                if not _dep_ok(cg.vertices[i], cg.vertices[j]):
+                    ref[i, j] = ref[j, i] = True
+    np.testing.assert_array_equal(cg.bits.to_dense(), ref)
+
+
+# ------------------------------------------------- constructed scenario
+def _two_router_scenario():
+    """4x4 CGRA, II=2.  Two routing ops (latency 2, slot 1) each with a
+    same-slot consumer whose drive window collapses to slot 1, while
+    eight VOOs saturate every OBUS bus-0 cell: any placement where both
+    routers drive the same column demands two drives from the single
+    surviving (bus, cycle) cell of that column."""
+    d = DFG()
+    vin0, vin1 = d.add_op(OpKind.VIN), d.add_op(OpKind.VIN)
+    r1 = d.add_op(OpKind.ROUTE, latency=2)
+    r2 = d.add_op(OpKind.ROUTE, latency=2)
+    c1, c2 = d.add_op(OpKind.COMPUTE), d.add_op(OpKind.COMPUTE)
+    vouts = [d.add_op(OpKind.VOUT) for _ in range(8)]
+    d.add_edge(vin0, r1)
+    d.add_edge(r1, c1)
+    d.add_edge(vin1, r2)
+    d.add_edge(r2, c2)
+    time = {vin0: 0, vin1: 0, r1: 1, r2: 1, c1: 3, c2: 3}
+    for i, v in enumerate(vouts):
+        time[v] = 2 if i < 4 else 3
+    sched = ScheduledDFG(d, 2, 2, time,
+                         {vin0: "bus", vin1: "bus"}, {})
+    placement = {
+        vin0: Vertex(-1, vin0, TIN, 0, 0, port=0, mode="bus"),
+        vin1: Vertex(-1, vin1, TIN, 0, 0, port=1, mode="bus"),
+        r1: Vertex(-1, r1, QUAD, 1, 1, pe=(0, 0), drive=(COL, 0)),
+        r2: Vertex(-1, r2, QUAD, 1, 1, pe=(1, 0), drive=(COL, 0)),
+        c1: Vertex(-1, c1, QUAD, 3, 1, pe=(2, 0)),
+        c2: Vertex(-1, c2, QUAD, 3, 1, pe=(3, 0)),
+    }
+    for i, v in enumerate(vouts):
+        placement[v] = Vertex(-1, v, TOUT, time[v], time[v] % 2,
+                              port=i % 4)
+    return sched, placement, (r1, r2)
+
+
+def _vertex_index(cg):
+    return {(v.op, v.kind, v.port, v.mode, v.pe, v.drive): v.idx
+            for v in cg.vertices}
+
+
+def test_pressure_edge_is_subset_of_assign_buses_rejections():
+    """The constructed scenario: conflict-free without pressure edges,
+    rejected by `_assign_buses` — and exactly that pair becomes a
+    pressure edge."""
+    sched, placement, (r1, r2) = _two_router_scenario()
+    cg_off = build_conflict_graph(sched, CGRA, bus_pressure=False)
+    idx = _vertex_index(cg_off)
+    sel = np.zeros(cg_off.n, dtype=bool)
+    for oid, v in placement.items():
+        sel[idx[(v.op, v.kind, v.port, v.mode, v.pe, v.drive)]] = True
+    assert sel.sum() == len(sched.dfg.ops)
+    adj_off = cg_off.bits.to_dense()
+    assert not adj_off[np.ix_(sel, sel)].any(), \
+        "scenario must be a complete MIS without pressure edges"
+    # ... which the validator rejects on bus capacity:
+    report = validate_mapping(sched, CGRA, placement)
+    assert not report.ok
+    assert any("bus congestion" in v for v in report.violations)
+    # ... and the pressure edges forbid exactly that pair up front:
+    cg_on = build_conflict_graph(sched, CGRA, bus_pressure=True)
+    i1 = idx[(r1, QUAD, -1, "", (0, 0), (COL, 0))]
+    i2 = idx[(r2, QUAD, -1, "", (1, 0), (COL, 0))]
+    assert cg_on.bits.has_edge(i1, i2)
+    assert not cg_off.bits.has_edge(i1, i2)
+
+
+def test_buses_per_scope_threads_through_capacity():
+    """One extra routing bus per scope makes the same placement valid,
+    and the pressure edges dissolve — capacity comes from CGRAConfig."""
+    sched, placement, (r1, r2) = _two_router_scenario()
+    wide = CGRAConfig(buses_per_scope=3)
+    assert len(TEC(wide, 2).buses(COL, 0)) == 3
+    assert len(TEC(CGRA, 2).buses(COL, 0)) == 2
+    report = validate_mapping(sched, wide, placement)
+    assert report.ok, report.violations
+    cg_wide = build_conflict_graph(sched, wide, bus_pressure=True)
+    cg_off = build_conflict_graph(sched, wide, bus_pressure=False)
+    np.testing.assert_array_equal(cg_wide.bits.to_dense(),
+                                  cg_off.bits.to_dense())
+
+
+# ------------------------------------------------------ GRF regression
+def test_grf_residency_counts_inter_iteration_distance():
+    """A distance>=1 consumer of a GRF-parked VIO parks the datum for
+    distance * II extra cycles; the old successor-slot-only window
+    underestimated exactly this (GRF peak 1 instead of 4 here)."""
+    d = DFG()
+    vin = d.add_op(OpKind.VIN)
+    c = d.add_op(OpKind.COMPUTE)
+    d.add_edge(vin, c, distance=3)
+    sched = ScheduledDFG(d, 2, 1, {vin: 0, c: 1}, {vin: "grf"}, {})
+    cgra = CGRAConfig(grf=2)
+    placement = {
+        vin: Vertex(-1, vin, TIN, 0, 0, port=0, mode="grf"),
+        c: Vertex(-1, c, QUAD, 1, 1, pe=(0, 0)),
+    }
+    report = validate_mapping(sched, cgra, placement)
+    # park window [0, 1 + 3*2] = 8 cycles over II=2 -> 4 live per slot
+    assert report.grf_peak == 4
+    assert not report.ok
+    assert any("GRF overflow" in v for v in report.violations)
+    # enough capacity -> accepted, same peak
+    report_ok = validate_mapping(sched, CGRAConfig(grf=4), placement)
+    assert report_ok.grf_peak == 4
+    assert report_ok.ok, report_ok.violations
