@@ -20,6 +20,11 @@ Sections (all written to artifacts/bench/bench_mis.json):
   cgra_8x8       — end-to-end maps on an 8x8 CGRAConfig, the scenario
                    the dense engine could not reach comfortably
                    (|V_C| > 2000).
+  comap          — 16x16 scale: a |V_C| > 10^4 generated loop kernel
+                   mapped solo (row-cache fallback regime), plus
+                   two/three-kernel co-mapping through `repro.comap`
+                   (regions + common II + arbitration + merged
+                   validator replay).
 """
 
 from __future__ import annotations
@@ -258,12 +263,48 @@ def bench_8x8(quick: bool = False) -> list[dict]:
     return rows
 
 
+def bench_comap(quick: bool = False) -> list[dict]:
+    """16x16-scale scenarios: the single |V_C| > 10^4 generated kernel
+    (the engine's row-cache fallback regime) and multi-kernel co-mapping
+    with the merged binding replayed through the global validator."""
+    from repro.comap import co_map
+    from repro.core import COMAP_16X16_SPECS, scale_16x16_loop
+
+    big = CGRAConfig(rows=16, cols=16)
+    kw = dict(max_bus_fanout=4, mis_restarts=4, mis_iters=4000)
+    rows = []
+
+    r = map_dfg(scale_16x16_loop(), big, max_ii=8, **kw)
+    rows.append(dict(kernel="loop40", mode="map16x16", ok=r.ok, ii=r.ii,
+                     mii=r.mii, v_c=r.cg_size[0], e_c=r.cg_size[1],
+                     wall_s=round(r.wall_s, 3)))
+    print(f"comap: {rows[-1]}")
+
+    k1, k2, st = (spec.build() for spec in COMAP_16X16_SPECS)
+    cm = co_map([k1, k2], big, max_ii=10, **kw)
+    rows.append(dict(kernel="loop2", mode="comap16x16", ok=cm.ok,
+                     ii=cm.ii, rounds=cm.attempts,
+                     valid=bool(cm.report and cm.report.ok),
+                     wall_s=round(cm.wall_s, 3)))
+    print(f"comap: {rows[-1]}")
+
+    if not quick:
+        cm3 = co_map([k1, k2, st], big, max_ii=10, **kw)
+        rows.append(dict(kernel="loop2stencil", mode="comap16x16",
+                         ok=cm3.ok, ii=cm3.ii, rounds=cm3.attempts,
+                         valid=bool(cm3.report and cm3.report.ok),
+                         wall_s=round(cm3.wall_s, 3)))
+        print(f"comap: {rows[-1]}")
+    return rows
+
+
 def run_all(quick: bool = False) -> dict:
     bench = dict(
         engine_speedup=bench_engine_speedup(quick),
         kernel_table=bench_kernel_table(quick),
         straggler=bench_stragglers(quick),
         cgra_8x8=bench_8x8(quick),
+        comap=bench_comap(quick),
     )
     os.makedirs(ART, exist_ok=True)
     path = os.path.join(ART, "bench_mis.json")

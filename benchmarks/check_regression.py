@@ -1,7 +1,8 @@
 """Bench-regression gate for CI: diff a fresh ``bench_mis.json`` against
 the committed baseline and fail on a >2x wall-time regression of any
-kernel (kernel_table, straggler and cgra_8x8 rows are all keyed by
-(kernel, mode)).
+kernel (kernel_table, straggler, cgra_8x8 and comap rows are all keyed
+by (kernel, mode) — the comap section gates the 16x16 scale and the
+multi-kernel co-mapping path).
 
   python benchmarks/check_regression.py \
       --baseline /tmp/bench_baseline.json \
@@ -31,7 +32,7 @@ import sys
 
 def _rows(bench: dict) -> dict[tuple, float]:
     out = {}
-    for section in ("kernel_table", "straggler", "cgra_8x8"):
+    for section in ("kernel_table", "straggler", "cgra_8x8", "comap"):
         for row in bench.get(section, []):
             out[(section, row["kernel"], row["mode"])] = row["wall_s"]
     return out

@@ -228,6 +228,9 @@ def bench_mis_engine(quick: bool = False):
     for row in bench["cgra_8x8"]:
         rows.append([f"map8x8_{row['kernel']}_{row['mode']}_wall_s",
                      row["wall_s"]])
+    for row in bench["comap"]:
+        rows.append([f"{row['mode']}_{row['kernel']}_wall_s",
+                     row["wall_s"]])
     return _emit("mis_engine", ["name", "value"], rows)
 
 

@@ -1,0 +1,138 @@
+"""Multi-kernel co-mapping driver.
+
+``co_map`` places several DFGs on one PEA concurrently:
+
+1. **Layout** — `regions.partition` slices the array into rectangular
+   regions, area-proportional to the kernels' op counts (HeLEx-style
+   spatial region layout, arXiv 2511.19366).
+2. **Common-II region mapping** — every kernel is mapped inside its
+   region view (``CGRAConfig.view``) at one shared II: modulo slots of
+   co-resident kernels must mean the same cycle for the shared buses to
+   be arbitrable at all.  The search starts at the largest per-region
+   MII and escalates.  Each region run *is* a full `bandmap.map_dfg`
+   pipeline — conflict-graph build, `certify` pre-pass,
+   `PortfolioSBTS` harvest rounds — and yields a regular
+   ``MappingResult``; a co-mapping round batches those engines over all
+   regions before any global work happens.
+3. **Arbitration** — `arbiter.arbitrate` cross-checks the regions'
+   fixed port/bus-cell claims and the pooled GRF budget; clashing
+   regions are re-mapped with diversified seeds (the co-mapping
+   analogue of the validation-retry re-arm).
+4. **Merged replay** — `arbiter.merge_mappings` disjoint-unions the
+   region bindings into one global ``ScheduledDFG`` + placement and the
+   existing `core.validate.validate_mapping` replays it against the
+   full-array config.  Only a validator-accepted merged binding is
+   reported ok.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+
+from repro.core.bandmap import MappingResult, map_dfg
+from repro.core.cgra import CGRAConfig
+from repro.core.conflict import Vertex
+from repro.core.dfg import DFG
+from repro.core.schedule import ScheduledDFG, mii
+from repro.core.validate import ValidationReport, validate_mapping
+from repro.core.workloads import op_weight
+
+from .arbiter import ArbiterReport, arbitrate, merge_mappings
+from .regions import Region, partition
+
+
+@dataclasses.dataclass
+class CoMapResult:
+    ok: bool
+    ii: int                          # common II (-1 when nothing mapped)
+    regions: list[Region]
+    results: list[MappingResult | None]   # per-kernel region mappings
+    sched: ScheduledDFG | None       # merged schedule (ok runs)
+    placement: dict[int, Vertex]     # merged global placement
+    report: ValidationReport | None  # merged validator replay
+    arbiter: ArbiterReport | None
+    attempts: int                    # co-mapping rounds spent
+    wall_s: float
+
+    @property
+    def n_kernels(self) -> int:
+        return len(self.regions)
+
+    def summary(self) -> str:
+        per = ", ".join(
+            f"{r}→{'∅' if res is None else res.summary().split(':')[1].strip()}"
+            for r, res in zip(self.regions, self.results))
+        return (f"comap: ok={self.ok} II={self.ii} "
+                f"kernels={self.n_kernels} rounds={self.attempts} "
+                f"[{per}]")
+
+
+def co_map(dfgs: list[DFG], cgra: CGRAConfig, *, mode: str = "bandmap",
+           max_ii: int = 32, seed: int = 0, rounds: int = 4,
+           grf_split: bool = True, **map_kw) -> CoMapResult:
+    """Co-map ``dfgs`` onto ``cgra``; see the module docstring.
+
+    ``rounds`` bounds the arbitration/validation retries per II before
+    escalating.  ``grf_split`` divides the global register file evenly
+    among regions for the local runs (the pooled budget is re-checked by
+    the arbiter and the merged replay either way).  Remaining keyword
+    arguments are forwarded to every `map_dfg` call (mis_restarts,
+    certify, row_cache_limit, ...)."""
+    t0 = _time.perf_counter()
+    k = len(dfgs)
+    if k == 0:
+        raise ValueError("co_map needs at least one DFG")
+    regions = partition(cgra, [op_weight(d) for d in dfgs])
+    grf_share = (cgra.grf // k) if grf_split else cgra.grf
+    cfgs = [reg.config(cgra, grf=grf_share) for reg in regions]
+    start_ii = max(mii(d, cfg) for d, cfg in zip(dfgs, cfgs))
+
+    results: list[MappingResult | None] = [None] * k
+    attempts = 0
+    last_arb: ArbiterReport | None = None
+    last_report: ValidationReport | None = None
+    last_merged: tuple[ScheduledDFG | None, dict] = (None, {})
+
+    for ii_star in range(start_ii, max_ii + 1):
+        results = [None] * k
+        stale = set(range(k))
+        for rnd in range(rounds):
+            attempts += 1
+            for i in sorted(stale):
+                results[i] = map_dfg(
+                    dfgs[i], cfgs[i], mode=mode, min_ii=ii_star,
+                    max_ii=ii_star, seed=seed + 131 * rnd + 17 * i,
+                    **map_kw)
+            if not all(r is not None and r.ok for r in results):
+                # Some region cannot bind at this common II at all —
+                # re-seeding the others cannot fix that; escalate.
+                break
+            arb = arbitrate(regions, results, cgra)
+            last_arb = arb
+            if not arb.ok:
+                stale = set(arb.implicated)
+                continue
+            merged_sched, placement = merge_mappings(regions, results)
+            report = validate_mapping(merged_sched, cgra, placement)
+            last_report = report
+            last_merged = (merged_sched, placement)
+            if report.ok:
+                return CoMapResult(
+                    ok=True, ii=ii_star, regions=regions,
+                    results=results, sched=merged_sched,
+                    placement=placement, report=report, arbiter=arb,
+                    attempts=attempts,
+                    wall_s=_time.perf_counter() - t0)
+            # Merged validation failed on capacity the fixed claims
+            # could not see (global bus packing): re-map the regions the
+            # advisory overlaps implicate, or everyone as a last resort.
+            stale = set(arb.advisory_implicated) or set(range(k))
+
+    merged_sched, placement = last_merged
+    return CoMapResult(
+        ok=False,
+        ii=next((r.ii for r in results if r is not None), -1),
+        regions=regions, results=results, sched=merged_sched,
+        placement=placement, report=last_report, arbiter=last_arb,
+        attempts=attempts, wall_s=_time.perf_counter() - t0)

@@ -12,6 +12,9 @@ from .kernels_cnkm import (EXTRA_KERNELS, PAPER_KERNELS,
 from .mis import greedy_mis, solve_mis, solve_mis_portfolio
 from .schedule import ScheduledDFG, mii, res_mii, schedule_dfg
 from .tec import TEC
+from .workloads import (COMAP_16X16_SPECS, WorkloadSpec, generate,
+                        make_loop_kernel, make_reduction, make_stencil,
+                        scale_16x16_loop, sweep_specs)
 
 __all__ = [
     "MappingResult", "compare_modes", "map_dfg", "BitsetGraph",
@@ -20,4 +23,6 @@ __all__ = [
     "PAPER_KERNELS", "all_paper_kernels", "cnkm_name", "make_cnkm",
     "greedy_mis", "solve_mis", "solve_mis_portfolio", "ScheduledDFG",
     "mii", "res_mii", "schedule_dfg", "TEC",
+    "COMAP_16X16_SPECS", "WorkloadSpec", "generate", "make_loop_kernel",
+    "make_reduction", "make_stencil", "scale_16x16_loop", "sweep_specs",
 ]

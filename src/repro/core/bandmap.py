@@ -60,10 +60,14 @@ class MappingResult:
 
 def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
             use_grf: bool | None = None, max_ii: int = 32,
+            min_ii: int | None = None,
             mis_restarts: int = 10, mis_iters: int = 20000,
             seed: int = 0, certify: bool = True,
             bus_pressure: bool = True,
-            certify_budget: int = 200_000) -> MappingResult:
+            certify_budget: int = 200_000,
+            n_exact_placements: int = 4,
+            row_cache_limit: int | None = None,
+            max_bus_fanout: int | None = None) -> MappingResult:
     """Run the full 4-phase mapping.  Phase 4 (incomplete-mapping
     processing) = MIS restarts with fresh seeds, re-scheduling with jitter
     (ASAP schedules are II-invariant, so jitter supplies the diversity),
@@ -72,23 +76,37 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
     ``certify`` runs the II-infeasibility certificate stages
     (`core.certify`) on every (II, jitter) schedule before the portfolio:
     a certified combination is skipped outright (recorded in
-    ``MappingResult.certificates``), and a complete placement found by
-    the exhaustive stage is validated directly, bypassing the portfolio
-    when the validator accepts it.  ``bus_pressure`` folds the provable
-    bus-capacity structure into the conflict graph
+    ``MappingResult.certificates``), and up to ``n_exact_placements``
+    complete placements enumerated by the exhaustive stage are validated
+    directly, bypassing the portfolio when the validator accepts one
+    (enumerating several closes the residual slow path where the first
+    placement's bus packing is rejected).  ``bus_pressure`` folds the
+    provable bus-capacity structure into the conflict graph
     (`conflict.bus_pressure_edges`).  Both default on; disabling both
-    reproduces the seed pipeline exactly."""
+    reproduces the seed pipeline exactly.
+
+    ``min_ii`` starts the II escalation no lower than the given value —
+    the co-mapper (`repro.comap`) uses it to bind several kernels at one
+    common II.  ``row_cache_limit`` bounds the unpacked-row caches in
+    bytes (default `mis.ROW_CACHE_LIMIT`); graphs past it run on the
+    per-move-unpack fallback.  ``max_bus_fanout`` caps the consumers
+    served per delivery port (see `schedule._Scheduler`): on wide
+    arrays the physical M pins whole fan-outs to one row, and capping
+    it restores the multi-port split a narrow array would have used."""
     t_start = _time.perf_counter()
     the_mii = mii(dfg, cgra)
+    cache_limit = ROW_CACHE_LIMIT if row_cache_limit is None \
+        else row_cache_limit
     attempts = 0
     certificates: list[IICertificate] = []
     last: tuple = (None, None, None, 0, (0, 0))
-    for cur_ii in range(the_mii, max_ii + 1):
+    for cur_ii in range(max(the_mii, min_ii or 0), max_ii + 1):
         for jitter in (0, 1, 2, 3):
             try:
                 sched = schedule_dfg(dfg, cgra, mode=mode, ii=cur_ii,
                                      max_ii=cur_ii, use_grf=use_grf,
-                                     jitter=jitter, seed=seed)
+                                     jitter=jitter, seed=seed,
+                                     max_bus_fanout=max_bus_fanout)
             except RuntimeError:
                 continue
             cg = build_conflict_graph(sched, cgra,
@@ -97,11 +115,13 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
             # One unpacked-row cache per conflict graph, shared by the
             # certificate search, the portfolio and the repair retries.
             shared_u8 = cg.bits.rows_u8(np.arange(cg.n)) \
-                if 0 < cg.n * cg.n <= ROW_CACHE_LIMIT else None
+                if 0 < cg.n * cg.n <= cache_limit else None
             if certify:
-                cert, csp_sol = certify_ii_infeasible(
+                cert, csp_sols = certify_ii_infeasible(
                     cg, sched, cgra, jitter=jitter,
-                    node_budget=certify_budget, row_cache=shared_u8)
+                    node_budget=certify_budget, row_cache=shared_u8,
+                    n_placements=n_exact_placements,
+                    row_cache_limit=cache_limit)
                 if cert is not None:
                     # Proven unbindable: skip the whole portfolio budget
                     # for this (II, jitter) combination.
@@ -109,10 +129,11 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
                     if last[0] is None:
                         last = (sched, None, None, 0, (cg.n, cg.n_edges))
                     continue
-                if csp_sol is not None:
-                    # The exhaustive stage found a complete conflict-free
-                    # placement — try it on the validator before paying
-                    # for the portfolio.
+                # The exhaustive stage enumerated complete conflict-free
+                # placements — try each on the validator before paying
+                # for the portfolio (several, because bus packing / LRF
+                # residency can reject the first).
+                for csp_sol in csp_sols or ():
                     attempts += 1
                     placement = {cg.vertices[i].op: cg.vertices[i]
                                  for i in mis_indices(csp_sol)}
@@ -142,7 +163,8 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
                      if k % 3 != 2 else None for k in range(budget)]
             attempts += budget
             sbts = PortfolioSBTS(cg.bits, inits, seed=base,
-                                 row_cache=shared_u8)
+                                 row_cache=shared_u8,
+                                 row_cache_limit=cache_limit)
             # Repair retries reuse the same cache; when the graph was too
             # big for it, row_cache() materialises one lazily so the
             # retries don't each re-unpack n² rows.

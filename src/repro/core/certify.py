@@ -205,23 +205,34 @@ def _symmetry_attrs(cg: ConflictGraph, cgra: CGRAConfig | None,
 def _search_complete(cg: ConflictGraph, node_budget: int,
                      row_cache: np.ndarray | None = None,
                      cgra: CGRAConfig | None = None,
-                     ) -> tuple[bool | None, np.ndarray | None, int]:
-    """Stage 3: exact bounded CSP.  Returns (verdict, placement, nodes):
-    verdict False = proven infeasible, True = ``placement`` is a complete
-    independent placement (bool [n] membership), None = budget exhausted.
-    """
+                     n_solutions: int = 1,
+                     row_cache_limit: int | None = None,
+                     ) -> tuple[bool | None, list[np.ndarray], int]:
+    """Stage 3: exact bounded CSP.  Returns (verdict, placements, nodes):
+    verdict False = proven infeasible, True = ``placements`` holds up to
+    ``n_solutions`` distinct complete independent placements (bool [n]
+    memberships, found by continuing the backtracking past the first
+    hit), None = budget exhausted before either outcome.
+
+    Enumerating several placements is what closes the residual slow
+    path in `map_dfg`: when the validator rejects the first placement's
+    bus packing, the next candidates are already in hand — the search
+    yields them for a few extra nodes — instead of falling back to the
+    full portfolio."""
     n = cg.n
     ops = sorted(cg.op_vertices)
     k = len(ops)
     if k == 0:
-        return True, np.zeros(0, dtype=bool), 0
+        return True, [np.zeros(0, dtype=bool)], 0
     # Unpacked rows: share the caller's cache, or materialise one only
     # within the engine's cache bound; past it fall back to per-move
     # row unpack (O(n/8) per expansion, no n^2 allocation).  uint8 rows
     # add directly into the int16 banned stack — no widened copy.
+    cache_limit = ROW_CACHE_LIMIT if row_cache_limit is None \
+        else row_cache_limit
     if row_cache is not None:
         u8 = row_cache
-    elif 0 < n * n <= ROW_CACHE_LIMIT:
+    elif 0 < n * n <= cache_limit:
         u8 = cg.bits.rows_u8(np.arange(n))
     else:
         u8 = None
@@ -253,11 +264,12 @@ def _search_complete(cg: ConflictGraph, node_budget: int,
     tb = -0.9 * tb / (tb.max() + 1.0)
 
     def run(sym: tuple | None, budget: int,
-            ) -> tuple[bool | None, np.ndarray, int]:
+            ) -> tuple[bool | None, list[np.ndarray], int]:
         unassigned = np.ones(k, dtype=bool)
         chosen = np.full(k, -1, dtype=np.int64)
         stack = np.zeros((k + 2, n), dtype=np.int16)
         nodes = [0]
+        solutions: list[np.ndarray] = []
 
         def dfs(depth: int, used_rows: frozenset,
                 used_cols: frozenset) -> bool | None:
@@ -265,7 +277,10 @@ def _search_complete(cg: ConflictGraph, node_budget: int,
             if nodes[0] > budget:
                 return None
             if not unassigned.any():
-                return True
+                # Complete placement: record it and keep backtracking
+                # (returning False) until the requested count is in hand.
+                solutions.append(chosen.copy())
+                return len(solutions) >= n_solutions
             banned = stack[depth]
             alive = banned == 0
             if contiguous:
@@ -318,36 +333,51 @@ def _search_complete(cg: ConflictGraph, node_budget: int,
             return result
 
         verdict = dfs(0, frozenset(), frozenset())
-        return verdict, chosen, nodes[0]
+        return verdict, solutions, nodes[0]
 
     # Phase 1: plain search under a small budget — feasible schedules
     # usually resolve here, skipping the symmetry verification cost.
+    # Graphs past the row-cache bound stop here too: without the u8
+    # cache every node pays an O(n) row unpack and the symmetry
+    # verification (which needs the full cache) is unavailable, so a
+    # six-figure node budget burns seconds per (II, jitter) with no
+    # realistic chance of exhausting a |V_C| ~ 10^4 space — "unknown"
+    # after the cheap pass is the honest verdict at that scale.
     budget1 = min(node_budget, _PLAIN_NODES_FIRST)
-    verdict, chosen, spent = run(None, budget1)
-    if verdict is None and node_budget > budget1:
+    verdict, sols, spent = run(None, budget1)
+    if verdict is None and not sols and node_budget > budget1 \
+            and u8 is not None:
         sym = _symmetry_attrs(cg, cgra, u8) if u8 is not None else None
-        verdict, chosen, spent2 = run(sym, node_budget - spent)
+        verdict, sols, spent2 = run(sym, node_budget - spent)
         spent += spent2
-    placement = None
-    if verdict:
-        placement = np.zeros(n, dtype=bool)
-        placement[chosen[chosen >= 0]] = True
-    return verdict, placement, spent
+    placements = []
+    for chosen in sols:
+        p = np.zeros(n, dtype=bool)
+        p[chosen[chosen >= 0]] = True
+        placements.append(p)
+    if placements:
+        # An exhausted (False) or budget-out (None) sweep that still
+        # recorded placements is a feasibility witness, not a proof.
+        verdict = True
+    return verdict, placements, spent
 
 
 def certify_ii_infeasible(cg: ConflictGraph, sched: ScheduledDFG,
                           cgra: CGRAConfig, *, jitter: int = 0,
                           node_budget: int = 200_000,
                           row_cache: np.ndarray | None = None,
+                          n_placements: int = 1,
+                          row_cache_limit: int | None = None,
                           ) -> tuple[IICertificate | None,
-                                     np.ndarray | None]:
+                                     list[np.ndarray] | None]:
     """Run the certificate stages against one scheduled DFG.
 
-    Returns ``(certificate, placement)``: a certificate when the schedule
-    is proven unbindable (placement is None); otherwise ``certificate``
-    is None and ``placement`` — when stage 3 found one within budget — is
-    a complete conflict-free membership vector the caller may validate
-    directly (both may be None when the budget ran out)."""
+    Returns ``(certificate, placements)``: a certificate when the
+    schedule is proven unbindable (placements is None); otherwise
+    ``certificate`` is None and ``placements`` holds up to
+    ``n_placements`` complete conflict-free membership vectors stage 3
+    enumerated within budget for the caller to validate directly (the
+    list is empty when the budget ran out before any was found)."""
     t0 = _time.perf_counter()
     detail = _resource_count_bound(sched, cgra)
     if detail is not None:
@@ -357,12 +387,12 @@ def certify_ii_infeasible(cg: ConflictGraph, sched: ScheduledDFG,
     if detail is not None:
         return IICertificate(sched.ii, jitter, "clique-merge", detail,
                              0, _time.perf_counter() - t0), None
-    verdict, placement, nodes = _search_complete(cg, node_budget,
-                                                 row_cache=row_cache,
-                                                 cgra=cgra)
+    verdict, placements, nodes = _search_complete(
+        cg, node_budget, row_cache=row_cache, cgra=cgra,
+        n_solutions=n_placements, row_cache_limit=row_cache_limit)
     if verdict is False:
         detail = (f"exhaustive search: no complete independent placement "
                   f"of {len(cg.op_vertices)} ops over {cg.n} candidates")
         return IICertificate(sched.ii, jitter, "exhausted", detail,
                              nodes, _time.perf_counter() - t0), None
-    return None, placement
+    return None, placements

@@ -59,6 +59,22 @@ class CGRAConfig:
             for c in range(self.cols):
                 yield (r, c)
 
+    def view(self, rows: int, cols: int, *,
+             grf: int | None = None) -> "CGRAConfig":
+        """Region view: a ``rows`` x ``cols`` sub-array sharing this
+        config's per-PE parameters (lrf, buses_per_scope).
+
+        Used by the co-mapping subsystem (`repro.comap`): each rectangular
+        region of the PEA is mapped as if it were a standalone CGRA of
+        this shape, with the region's row/column indices translated back
+        to global coordinates afterwards.  ``grf`` overrides the global
+        register file share granted to the region (the GRF is a single
+        physical resource, so co-resident regions must split it)."""
+        assert 0 < rows <= self.rows and 0 < cols <= self.cols
+        return dataclasses.replace(
+            self, rows=rows, cols=cols,
+            grf=self.grf if grf is None else grf)
+
 
 # Resource identifiers used across scheduling / binding.  A resource instance
 # is (kind, index, modulo_time).

@@ -138,13 +138,21 @@ def _dep_ok(prod: Vertex, cons: Vertex) -> bool:
 
 
 def build_conflict_graph(sched: ScheduledDFG, cgra: CGRAConfig,
-                         use_kernel: bool = False,
+                         use_kernel: bool | str = False,
                          bus_pressure: bool = False) -> ConflictGraph:
     """Build the mixed conflict graph.  With ``bus_pressure=False``
     (default) the adjacency is byte-identical to the seed formulation
     (`dense_conflicts_python` + `_dep_ok`); ``bus_pressure=True``
     additionally folds the provable bus-capacity structure in via
-    :func:`bus_pressure_edges` (the pipeline default — see map_dfg)."""
+    :func:`bus_pressure_edges` (the pipeline default — see map_dfg).
+
+    ``use_kernel`` selects the occupancy/clique formulation: False =
+    packed bitset rows on the host (default), True = the dense-bool
+    conflict-matrix kernel, "packed" = the packed-word variant's host
+    oracle (dense ref + pack), "packed-pallas" = the packed-word Pallas
+    kernel whose uint64 rows feed `BitsetGraph` directly — the TPU
+    offload path with no python pack step (requires a TPU backend; the
+    interpret-mode equivalence lives in tests/test_kernels.py)."""
     dfg, ii = sched.dfg, sched.ii
     vertices: list[Vertex] = []
     op_vertices: dict[int, list[int]] = {}
@@ -182,7 +190,12 @@ def build_conflict_graph(sched: ScheduledDFG, cgra: CGRAConfig,
     # conflict-matrix kernel (kernels/conflict_matrix, Pallas) is the
     # TPU-offload formulation of the same rules, proven equal in
     # tests/test_bandmap_core.py and test_kernels.py.
-    if use_kernel:
+    if use_kernel in ("packed", "packed-pallas"):
+        from repro.kernels.conflict_matrix.ops import conflict_matrix_packed
+        bits = BitsetGraph(len(vertices))
+        bits.rows = conflict_matrix_packed(
+            vertices, use_pallas=use_kernel == "packed-pallas")
+    elif use_kernel:
         from repro.kernels.conflict_matrix.ops import conflict_matrix
         bits = BitsetGraph.from_dense(np.asarray(conflict_matrix(vertices)))
     else:

@@ -172,8 +172,12 @@ class DFG:
         self.ops[oid].clone_of = group
         new = self.add_op(OpKind.VIN, f"{op.name}'", op.latency, clone_of=group)
         for c in list(consumers):
+            # Preserve each edge's iteration distance: an inter-iteration
+            # consumer stays inter-iteration on the clone's port.
+            dists = [e.distance for e in self.edges
+                     if e.src == oid and e.dst == c]
             self.remove_edge(oid, c)
-            self.add_edge(new, c)
+            self.add_edge(new, c, distance=max(dists, default=0))
         return new
 
     def copy(self) -> "DFG":

@@ -66,7 +66,8 @@ class PortfolioSBTS:
     """
 
     def __init__(self, g: BitsetGraph, inits, *, tenure: int = 7,
-                 seed: int = 0, row_cache: np.ndarray | None = None):
+                 seed: int = 0, row_cache: np.ndarray | None = None,
+                 row_cache_limit: int | None = None):
         self.g = g
         self.k = len(inits)
         self.tenure = tenure
@@ -103,13 +104,17 @@ class PortfolioSBTS:
         # Unpacked 0/1 row cache for delta updates: one unpackbits of the
         # whole packed adjacency (or a caller-shared one, e.g. the
         # certificate stage's), after which each move's row fetch is a
-        # fancy gather.  Bounded to 32 MiB; beyond that, rows are
-        # unpacked per move (still O(n/8) traffic).
+        # fancy gather.  Bounded to ``row_cache_limit`` bytes (default
+        # ROW_CACHE_LIMIT = 32 MiB); beyond that, rows are unpacked per
+        # move (still O(n/8) traffic) — the |V_C| ~ 10^4 regime of a
+        # 16x16 PEA lands on this fallback.
+        self.row_cache_limit = ROW_CACHE_LIMIT if row_cache_limit is None \
+            else row_cache_limit
         if row_cache is not None:
             self._u8 = row_cache
         else:
             self._u8 = g.rows_u8(np.arange(n)) \
-                if 0 < n * n <= ROW_CACHE_LIMIT else None
+                if 0 < n * n <= self.row_cache_limit else None
         self._u8_ext: np.ndarray | None = None  # row_cache() overflow copy
 
     def row_cache(self) -> np.ndarray:

@@ -59,13 +59,18 @@ def mii(dfg: DFG, cgra: CGRAConfig) -> int:
     return max(res_mii(dfg, cgra), dfg.rec_mii())
 
 
-def _route_pes_needed(n_consumers: int, cgra: CGRAConfig) -> int:
+def _route_pes_needed(n_consumers: int, cgra: CGRAConfig,
+                      m_eff: int | None = None) -> int:
     """Routing PEs so one port + k routing PEs cover ``n_consumers``.
 
     coverage(k) = M - k + k*(rows-1): each routing PE takes one direct
     delivery slot in the port's row and adds rows-1 column-bus listeners.
+    ``m_eff`` caps the direct per-port budget below the physical M (see
+    the ``max_bus_fanout`` scheduling knob).
     """
     m, rows = cgra.pes_per_ibus, cgra.rows
+    if m_eff is not None:
+        m = min(m, m_eff)
     if n_consumers <= m:
         return 0
     gain = rows - 2  # net coverage gain per routing PE
@@ -76,12 +81,24 @@ def _route_pes_needed(n_consumers: int, cgra: CGRAConfig) -> int:
 
 class _Scheduler:
     def __init__(self, dfg: DFG, cgra: CGRAConfig, mode: str, ii: int,
-                 use_grf: bool, jitter: int = 0, seed: int = 0):
+                 use_grf: bool, jitter: int = 0, seed: int = 0,
+                 max_bus_fanout: int | None = None):
         self.dfg = dfg
         self.cgra = cgra
         self.mode = mode
         self.ii = ii
         self.use_grf = use_grf
+        # Effective per-port delivery budget.  The paper's policy serves
+        # up to M = pes_per_ibus consumers from one port; on wide arrays
+        # (M = 16) that pins a whole fan-out to a single row, which
+        # couples placement so hard that structurally mappable kernels
+        # stop binding.  ``max_bus_fanout`` caps the budget: RD beyond
+        # it allocates extra ports (bandmap: Q = ceil(RD/m_eff) clones,
+        # the same split a 4x4 array would have produced) or routing
+        # PEs (busmap), restoring placement freedom.  None = physical M
+        # (exact paper behaviour).
+        self.m_eff = cgra.pes_per_ibus if max_bus_fanout is None \
+            else max(1, min(cgra.pes_per_ibus, max_bus_fanout))
         # Phase-4 diversity: jitter > 0 delays ops by a random 0..jitter
         # slots past ASAP, producing distinct schedules on retry (ASAP alone
         # is II-invariant, so plain II escalation adds no slack).
@@ -130,7 +147,7 @@ class _Scheduler:
     def _schedule_vio(self, oid: int, t: int) -> None:
         dfg, cgra, m = self.dfg, self.cgra, t % self.ii
         rd = dfg.rd(oid)
-        m_bus = cgra.pes_per_ibus
+        m_bus = self.m_eff
         q_need = math.ceil(rd / m_bus)
 
         if self.use_grf and rd > m_bus and self.grf_live < cgra.grf:
@@ -167,7 +184,7 @@ class _Scheduler:
 
         # Phase 2: per-clone routing pre-allocation for residual coverage.
         for cid, g in zip(clone_ids, groups):
-            n_route = _route_pes_needed(len(g), cgra)
+            n_route = _route_pes_needed(len(g), cgra, self.m_eff)
             if n_route > 0:
                 self._insert_routes(cid, n_route)
 
@@ -180,7 +197,7 @@ class _Scheduler:
         dfg, cgra = self.dfg, self.cgra
         consumers = dfg.successors(host)
         capacity = max(cgra.rows - 1, 1)
-        direct = max(0, cgra.pes_per_ibus - n_route)
+        direct = max(0, self.m_eff - n_route)
         overflow = consumers[direct:]
         for k in range(n_route):
             part = overflow[k * capacity:(k + 1) * capacity]
@@ -189,8 +206,12 @@ class _Scheduler:
             rid = dfg.add_op(OpKind.ROUTE, f"rt{host}_{k}")
             dfg.add_edge(host, rid)
             for c in part:
+                # Carry the iteration distance onto the re-broadcast leg
+                # so inter-iteration consumers keep their semantics.
+                dists = [e.distance for e in dfg.edges
+                         if e.src == host and e.dst == c]
                 dfg.remove_edge(host, c)
-                dfg.add_edge(rid, c)
+                dfg.add_edge(rid, c, distance=max(dists, default=0))
             # Bookkeeping for the new op: its only pred is `host` (not yet
             # committed), so it becomes ready when host commits.  Consumers'
             # pred-counts are unchanged (vio edge swapped for route edge).
@@ -232,7 +253,7 @@ class _Scheduler:
                 # falling back to the slot offering the most ports.
                 rd = self.dfg.rd(oid)
                 q_need = (1 if self.mode == "busmap"
-                          else math.ceil(rd / cgra.pes_per_ibus))
+                          else math.ceil(rd / self.m_eff))
                 cands = [t for t in range(t0, t0 + ii)
                          if self.iport[t % ii] < cgra.n_iports]
                 if cands:
@@ -246,6 +267,17 @@ class _Scheduler:
                 return None
         if len(self.time) != len(self.dfg.ops):
             return None
+        # Loop-carried sanity: a back edge's source is unscheduled when
+        # the list scheduler places its destination (est() skips it), so
+        # the recurrence bound time[dst] + d*II >= time[src] + latency
+        # must be re-checked once all ops have times.  A violation means
+        # this II leaves too little slack for the cycle's latency —
+        # reject and let II escalation (schedule_dfg / map_dfg) retry.
+        for e in self.dfg.edges:
+            if e.distance > 0 and (
+                    self.time[e.dst] + e.distance * self.ii
+                    < self.time[e.src] + self.dfg.ops[e.src].latency):
+                return None
         self._retime_vios()
         return ScheduledDFG(self.dfg, ii, 0, self.time, self.delivery,
                             self.ports_alloc)
@@ -279,7 +311,8 @@ class _Scheduler:
 def schedule_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
                  ii: int | None = None, max_ii: int = 64,
                  use_grf: bool | None = None, jitter: int = 0,
-                 seed: int = 0) -> ScheduledDFG:
+                 seed: int = 0,
+                 max_bus_fanout: int | None = None) -> ScheduledDFG:
     """Iterative modulo scheduling.  Tries II = MII, MII+1, ... ≤ max_ii."""
     assert mode in ("bandmap", "busmap")
     if use_grf is None:
@@ -288,7 +321,8 @@ def schedule_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
     start = ii if ii is not None else the_mii
     for cur_ii in range(start, max_ii + 1):
         out = _Scheduler(dfg.copy(), cgra, mode, cur_ii, use_grf,
-                         jitter=jitter, seed=seed).run()
+                         jitter=jitter, seed=seed,
+                         max_bus_fanout=max_bus_fanout).run()
         if out is not None:
             out.mii = the_mii
             return out

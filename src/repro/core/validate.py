@@ -160,13 +160,23 @@ def validate_mapping(sched: ScheduledDFG, cgra: CGRAConfig,
         pv, cv = placement.get(e.src), placement.get(e.dst)
         if pv is None or cv is None or pv.kind != QUAD or cv.kind != QUAD:
             continue
+        t_ready = sched.time[e.src] + dfg.ops[e.src].latency
+        t_use = sched.time[e.dst] + e.distance * ii
+        if t_use < t_ready:
+            # Loop-carried recurrence violated: iteration i's consumer
+            # would read before iteration i-distance's producer wrote.
+            # Checked before the LRF / neighbour-link shortcuts — those
+            # paths need the value ready too (distance-0 edges satisfy
+            # this by scheduler construction; only distance > 0 edges,
+            # whose source the list scheduler cannot see, can trip it).
+            viol.append(f"recurrence violated on edge {e.src}->{e.dst}: "
+                        f"use t={t_use} < ready t={t_ready}")
+            continue
         if pv.pe == cv.pe:
             continue  # LRF path
         if (pv.drive is None and
                 abs(pv.pe[0] - cv.pe[0]) + abs(pv.pe[1] - cv.pe[1]) == 1):
             continue  # neighbour link (no bus resource)
-        t_ready = sched.time[e.src] + dfg.ops[e.src].latency
-        t_use = sched.time[e.dst] + e.distance * ii
         scopes = []
         if pv.drive is not None:
             scopes.append(pv.drive)
@@ -178,9 +188,6 @@ def validate_mapping(sched: ScheduledDFG, cgra: CGRAConfig,
         if not scopes:
             viol.append(f"unroutable edge {e.src}->{e.dst}: "
                         f"{pv.pe} -> {cv.pe}")
-            continue
-        if t_use < t_ready:
-            viol.append(f"no drive window for edge {e.src}->{e.dst}")
             continue
         window = list(range(t_ready, min(t_use, t_ready + ii - 1) + 1))
         transfers.append((e.src, e.dst, scopes, window))

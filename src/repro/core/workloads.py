@@ -1,0 +1,265 @@
+"""Synthetic workload generator: parameterized DFG families beyond CnKm.
+
+Every kernel the repo shipped so far (CnKm, §IV-A) is acyclic, so the
+loop-carried (distance > 0) RecMII path in `dfg.py` / `schedule.py` had no
+workload exercising it, and nothing stressed the engine at 16x16-scale
+candidate counts (|V_C| ~ 10^4).  This module generates seeded DFG
+families that open both axes:
+
+- **loop**    — random loop kernels with loop-carried accumulator cycles
+  (distance >= 1): RecMII > 1 for tight recurrences, plus optional
+  inter-iteration VIO consumers (the GRF park-window case).
+- **stencil** — sliding-window kernels: ``points`` outputs, each a chain
+  of ``taps`` MACs over a shared shifted input window, giving the
+  non-uniform spatial-reuse profile (RD varies per VIO) the bandwidth
+  allocator has to split unevenly.
+- **reduction** — ``width``-wide ``arity``-ary reduction trees draining
+  to one output: deep dependence chains, low reuse.
+- **cnkm**    — the paper's family, included so sweeps can mix it in.
+
+All builders are deterministic in ``seed``.  :func:`sweep_specs` yields
+size sweeps up to 16x16-scale op counts; :func:`generate` builds a DFG
+from a family name + params (the registry the co-mapper and benches
+drive)."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import numpy as np
+
+from .dfg import DFG, OpKind
+from .kernels_cnkm import make_cnkm
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """A named, reproducible workload: family + params."""
+    name: str
+    family: str
+    params: dict
+
+    def build(self) -> DFG:
+        return generate(self.family, **self.params)
+
+
+def make_loop_kernel(n_chains: int = 4, chain_len: int = 4,
+                     n_inputs: int = 3, n_outputs: int = 2, *,
+                     n_carries: int = 1, max_distance: int = 2,
+                     cross_links: int = 1, vin_carry_distance: int = 0,
+                     seed: int = 0) -> DFG:
+    """Random loop kernel in the fabric-realizable chain shape:
+    generalized CnKm with loop-carried accumulators.
+
+    ``n_chains`` dependent chains of ``chain_len`` compute ops (a chain
+    binds naturally to a column of the PEA, its levels to rows).  Each
+    level draws one VIO shared by every chain at that level — the
+    CnKm-style spatial reuse the bandwidth allocator splits — with the
+    level→VIO assignment shuffled by ``seed``.  ``n_carries`` chains
+    close a loop-carried back edge (distance 1..``max_distance``) from
+    their last op to their first: RecMII = ceil(chain latency /
+    distance), the recurrence shape no shipped CnKm kernel produces.
+    ``cross_links`` adds stencil-style links between adjacent chains at
+    a shared level.  With ``vin_carry_distance`` > 0 one VIO edge is
+    rewired to that iteration distance — the inter-iteration-consumer
+    case whose GRF/LRF park window regressed in PR 2.
+
+    Why chains and not a random DAG: bus delivery pins all consumers of
+    a VIO (clone) to one row, and a plain producer reaches only its
+    row/column — a uniformly random DAG funnels whole kernels into a
+    single column where same-(row, slot) ops collide, which is
+    *provably* unbindable (the certificate stages exhaust it), not just
+    hard.  Chain-structured kernels with per-level reuse and sparse
+    cross-links are both realistic (MAC lattices, stencils) and
+    fabric-realizable.
+    """
+    assert n_carries <= n_chains
+    rng = np.random.default_rng(seed)
+    d = DFG()
+    # Only chain_len levels exist to consume inputs, so more VIOs than
+    # levels would leave dangling ports — clamp instead.
+    n_inputs = min(n_inputs, chain_len)
+    vins = [d.add_op(OpKind.VIN, f"in{i}") for i in range(n_inputs)]
+    # Level -> VIO assignment: every input covered, remainder random.
+    levels = list(range(n_inputs)) + [
+        int(rng.integers(0, n_inputs))
+        for _ in range(chain_len - n_inputs)]
+    rng.shuffle(levels)
+
+    chains = [[d.add_op(OpKind.COMPUTE, f"c{j}_{l}")
+               for l in range(chain_len)] for j in range(n_chains)]
+    # Level-major VIO edges keep each VIO's consumer list in chain
+    # order, so a multi-port split clones contiguous chain groups.
+    for l in range(chain_len):
+        if l < len(levels):
+            for j in range(n_chains):
+                d.add_edge(vins[levels[l]], chains[j][l])
+    for j in range(n_chains):
+        for a, b in zip(chains[j], chains[j][1:]):
+            d.add_edge(a, b)
+
+    # Loop-carried accumulators on the first n_carries chains.
+    for j in range(n_carries):
+        dist = int(rng.integers(1, max_distance + 1))
+        d.add_edge(chains[j][-1], chains[j][0], distance=dist)
+
+    # Stencil-style cross links: adjacent chains at one level.
+    for _ in range(cross_links):
+        if n_chains < 2:
+            break
+        j = int(rng.integers(0, n_chains - 1))
+        l = int(rng.integers(0, chain_len - 1))
+        d.add_edge(chains[j][l], chains[j + 1][l + 1])
+
+    if vin_carry_distance > 0:
+        # Inter-iteration VIO consumer: rewire one VIO edge to the
+        # given distance (keeping the one-VIO-pred-per-op invariant).
+        vin = vins[levels[-1]] if levels else vins[-1]
+        late = chains[-1][len(levels) - 1 if levels else -1]
+        d.remove_edge(vin, late)
+        d.add_edge(vin, late, distance=vin_carry_distance)
+
+    # One VOO per chain end (distinct producers: two VOOs fed by one op
+    # land in one modulo slot and need one column — an OPORT clash no
+    # binding can resolve).
+    for j in range(min(n_outputs, n_chains)):
+        vo = d.add_op(OpKind.VOUT, f"out{j}")
+        d.add_edge(chains[j][-1], vo)
+    return d
+
+
+def make_stencil(points: int = 4, taps: int = 3, *, seed: int = 0) -> DFG:
+    """1-D ``taps``-point stencil over ``points`` outputs.
+
+    out[j] = sum_k w_k * in[j + k]: a sliding window of shared VIOs, so
+    interior inputs are reused by up to ``taps`` MAC chains while edge
+    inputs are reused less — the non-uniform RD profile.  ``seed`` is
+    accepted for registry uniformity (the shape is deterministic)."""
+    del seed
+    d = DFG()
+    n_inputs = points + taps - 1
+    vins = [d.add_op(OpKind.VIN, f"in{i}") for i in range(n_inputs)]
+    vouts = []
+    for j in range(points):
+        prev = None
+        for k in range(taps):
+            mac = d.add_op(OpKind.COMPUTE, f"mac{j}_{k}")
+            d.add_edge(vins[j + k], mac)
+            if prev is not None:
+                d.add_edge(prev, mac)
+            prev = mac
+        vo = d.add_op(OpKind.VOUT, f"out{j}")
+        d.add_edge(prev, vo)
+        vouts.append(vo)
+    return d
+
+
+def make_reduction(width: int = 8, arity: int = 2, *,
+                   seed: int = 0) -> DFG:
+    """Map-then-reduce: ``width`` inputs, one elementwise leaf op each,
+    then an ``arity``-ary tree to one output.
+
+    The leaf layer is what makes the shape bindable on the row/column
+    fabric: a leaf sits on its own VIO's row, and sibling leaves meet
+    their reducer through a shared column — a *raw* tree whose reducers
+    consume two VIOs directly would need both ports on one row in one
+    slot, which the port fabric cannot provide."""
+    del seed
+    assert arity >= 2
+    d = DFG()
+    frontier = []
+    for i in range(width):
+        vin = d.add_op(OpKind.VIN, f"in{i}")
+        leaf = d.add_op(OpKind.COMPUTE, f"leaf{i}")
+        d.add_edge(vin, leaf)
+        frontier.append(leaf)
+    level = 0
+    while len(frontier) > 1:
+        nxt = []
+        for g in range(0, len(frontier), arity):
+            group = frontier[g:g + arity]
+            if len(group) == 1:
+                nxt.extend(group)
+                continue
+            red = d.add_op(OpKind.COMPUTE, f"r{level}_{g // arity}")
+            for s in group:
+                d.add_edge(s, red)
+            nxt.append(red)
+        frontier = nxt
+        level += 1
+    vo = d.add_op(OpKind.VOUT, "out0")
+    d.add_edge(frontier[0], vo)
+    return d
+
+
+FAMILIES: dict[str, Callable[..., DFG]] = {
+    "loop": make_loop_kernel,
+    "stencil": make_stencil,
+    "reduction": make_reduction,
+    "cnkm": make_cnkm,
+}
+
+
+def generate(family: str, **params) -> DFG:
+    """Build a DFG from a family name + params (registry entry point)."""
+    if family not in FAMILIES:
+        raise KeyError(f"unknown workload family {family!r}; "
+                       f"have {sorted(FAMILIES)}")
+    return FAMILIES[family](**params)
+
+
+def sweep_specs(scale: str = "4x4", *, seed: int = 0) -> list[WorkloadSpec]:
+    """Seeded size sweep per PEA scale.
+
+    ``scale`` picks the op-count regime: "4x4" stays at paper-kernel
+    sizes; "8x8" roughly quadruples them; "16x16" pushes the compute-op
+    count to the |V_C| ~ 10^4 candidate regime (ops x 256 PEs) the
+    ROADMAP names as untried."""
+    mult = {"4x4": 1, "8x8": 2, "16x16": 4}[scale]
+    base = 10 * mult                 # 10 / 20 / 40-class op counts
+    specs = [
+        WorkloadSpec(f"loop{base}", "loop",
+                     dict(n_chains=2 * mult, chain_len=5,
+                          n_inputs=min(2 + mult, 8), n_outputs=2,
+                          n_carries=mult, seed=seed)),
+        WorkloadSpec(f"stencil{4 * mult}t3", "stencil",
+                     dict(points=4 * mult, taps=3)),
+        WorkloadSpec(f"reduce{8 * mult}", "reduction",
+                     dict(width=8 * mult, arity=2)),
+        WorkloadSpec("c2k6", "cnkm", dict(n=2, m=6)),
+    ]
+    return specs
+
+
+def scale_16x16_loop(*, n_chains: int = 8, chain_len: int = 5,
+                     seed: int = 0) -> DFG:
+    """The |V_C| ~ 10^4 case: 40 compute ops on a 16x16 PEA give
+    40 x 256 quad candidates (> 10^4 vertices), past the portfolio's
+    default 32 MiB row-cache bound — the workload the per-move-unpack
+    fallback is verified against."""
+    return make_loop_kernel(
+        n_chains=n_chains, chain_len=chain_len, n_inputs=5, n_outputs=4,
+        n_carries=2, max_distance=2, cross_links=2, seed=seed)
+
+
+def op_weight(d: DFG) -> int:
+    """Region-area demand proxy used by the co-mapper's partitioner."""
+    return max(len(d.v_r), 1)
+
+
+# The canonical 16x16 co-mapping scenario: two loop kernels with
+# loop-carried accumulators (RecMII 4 and 3) plus a 6-point stencil.
+# Single source of truth for benchmarks/bench_mis.py (comap section),
+# tests/test_comap.py (scale smoke) and examples/comap_demo.py — tune
+# it here and all three stay in lockstep.
+COMAP_16X16_SPECS: list[WorkloadSpec] = [
+    WorkloadSpec("loopA", "loop",
+                 dict(n_chains=4, chain_len=4, n_inputs=3, n_outputs=2,
+                      n_carries=2, max_distance=2, seed=0)),
+    WorkloadSpec("loopB", "loop",
+                 dict(n_chains=5, chain_len=3, n_inputs=3, n_outputs=2,
+                      n_carries=1, max_distance=1, seed=1)),
+    WorkloadSpec("stencil6", "stencil", dict(points=6, taps=3)),
+]

@@ -184,3 +184,53 @@ def test_map_completes_on_8x8_cgra():
     r2 = map_dfg(make_cnkm(4, 8), big, mode="busmap")
     assert r2.ok and r2.ii == 1
     assert r2.cg_size[0] > 2000
+
+
+# ----------------------------------------------- row-cache configurability
+def test_row_cache_limit_fallback_equivalence():
+    """PortfolioSBTS trajectories are bit-identical whether rows come
+    from the unpacked u8 cache or the per-move-unpack fallback — the
+    cap (now configurable) only trades memory for gather speed."""
+    sched = schedule_dfg(make_cnkm(3, 6), CGRAConfig())
+    cg = build_conflict_graph(sched, CGRAConfig())
+    n_ops = len(sched.dfg.ops)
+    runs = []
+    for limit in (None, 0):          # default cache vs forced fallback
+        sbts = PortfolioSBTS(cg.bits, [None] * 4, seed=7,
+                             row_cache_limit=limit)
+        assert (sbts._u8 is None) == (limit == 0)
+        runs.append(sbts.run(300, target=n_ops).copy())
+    assert (runs[0] == runs[1]).all()
+
+
+def test_row_cache_limit_threads_through_map_dfg():
+    r_cached = map_dfg(make_cnkm(2, 6), CGRAConfig(), mode="busmap")
+    r_fallback = map_dfg(make_cnkm(2, 6), CGRAConfig(), mode="busmap",
+                         row_cache_limit=0)
+    assert (r_cached.ok, r_cached.ii, r_cached.n_routing_pes) == \
+        (r_fallback.ok, r_fallback.ii, r_fallback.n_routing_pes)
+
+
+@pytest.mark.slow
+def test_row_cache_fallback_hit_at_16x16_scale():
+    """|V_C| ~ 10^4 (a 40-op generated kernel on a 16x16 PEA) exceeds
+    the default 32 MiB bound: the constructor must skip the cache, the
+    per-move fallback must still solve, and `row_cache()` must
+    materialise the full unpacked adjacency lazily for one-shot
+    consumers."""
+    from repro.core import scale_16x16_loop
+    from repro.core.mis import ROW_CACHE_LIMIT
+    big = CGRAConfig(rows=16, cols=16)
+    sched = schedule_dfg(scale_16x16_loop(), big, max_bus_fanout=4)
+    cg = build_conflict_graph(sched, big)
+    assert cg.n > 10_000
+    assert cg.n * cg.n > ROW_CACHE_LIMIT
+    sbts = PortfolioSBTS(cg.bits, [None] * 2, seed=0)
+    assert sbts._u8 is None                      # fallback hit
+    bests = sbts.run(150, target=len(sched.dfg.ops))
+    for row in bests:                            # independence held
+        assert not cg.bits.any_conflict(pack_bool(row))
+    rc = sbts.row_cache()
+    assert rc.shape == (cg.n, cg.n)
+    v = int(np.flatnonzero(bests[0])[0])
+    assert (rc[v] == cg.bits.row_u8(v)).all()

@@ -76,18 +76,22 @@ def test_search_complete_matches_brute_force(seed):
     brute = any(
         all(not adj[a, b] for a, b in itertools.combinations(combo, 2))
         for combo in itertools.product(*op_vertices.values()))
-    verdict, placement, nodes = _search_complete(cg, node_budget=10 ** 6)
+    verdict, placements, nodes = _search_complete(cg, node_budget=10 ** 6,
+                                                  n_solutions=3)
     assert verdict is brute
     if verdict:
-        idx = np.flatnonzero(placement)
-        assert len(idx) == k
-        assert not adj[np.ix_(idx, idx)].any()
+        assert 1 <= len(placements) <= 3
+        assert len({p.tobytes() for p in placements}) == len(placements)
+        for p in placements:
+            idx = np.flatnonzero(p)
+            assert len(idx) == k
+            assert not adj[np.ix_(idx, idx)].any()
 
 
 def test_search_complete_respects_budget():
     cg = _mini_cg(4, {0: [0, 1], 1: [2, 3]}, [])
-    verdict, placement, nodes = _search_complete(cg, node_budget=0)
-    assert verdict is None and placement is None
+    verdict, placements, nodes = _search_complete(cg, node_budget=0)
+    assert verdict is None and placements == []
 
 
 # -------------------------------------------------------------- symmetry
@@ -107,7 +111,7 @@ def test_symmetry_verdicts_match_plain_search(n, m, mode, ii, jitter):
     assert v_sym == v_plain
     assert n_sym <= n_plain
     if v_sym:
-        idx = np.flatnonzero(p_sym)
+        idx = np.flatnonzero(p_sym[0])
         assert not cg.bits.to_dense()[np.ix_(idx, idx)].any()
 
 
@@ -137,8 +141,8 @@ def test_certifies_busmap_ii2_infeasible(n, m):
     sched = schedule_dfg(make_cnkm(n, m), CGRA, mode="busmap", ii=2,
                          max_ii=2)
     cg = build_conflict_graph(sched, CGRA, bus_pressure=True)
-    cert, placement = certify_ii_infeasible(cg, sched, CGRA)
-    assert cert is not None and placement is None
+    cert, placements = certify_ii_infeasible(cg, sched, CGRA)
+    assert cert is not None and placements is None
     assert cert.stage == "exhausted"
     assert cert.ii == 2
     assert cert.wall_s < 2.0          # ms-scale in practice; slack for CI
@@ -153,15 +157,17 @@ def test_no_certificate_on_feasible_schedules(n, m, mode, ii):
     sched = schedule_dfg(make_cnkm(n, m), CGRA, mode=mode, ii=ii,
                          max_ii=ii)
     cg = build_conflict_graph(sched, CGRA, bus_pressure=True)
-    cert, placement = certify_ii_infeasible(cg, sched, CGRA)
+    cert, placements = certify_ii_infeasible(cg, sched, CGRA,
+                                             n_placements=3)
     assert cert is None
-    assert placement is not None
-    idx = np.flatnonzero(placement)
-    assert len(idx) == len(sched.dfg.ops)
-    ops = {cg.vertices[i].op for i in idx}
-    assert ops == set(sched.dfg.ops)
+    assert placements
     adj = cg.bits.to_dense()
-    assert not adj[np.ix_(idx, idx)].any()
+    for placement in placements:
+        idx = np.flatnonzero(placement)
+        assert len(idx) == len(sched.dfg.ops)
+        ops = {cg.vertices[i].op for i in idx}
+        assert ops == set(sched.dfg.ops)
+        assert not adj[np.ix_(idx, idx)].any()
 
 
 def test_map_dfg_records_certificates():

@@ -1,0 +1,166 @@
+"""Multi-kernel co-mapping subsystem (repro/comap): region geometry,
+claim arbitration, merged-binding replay, and end-to-end co-maps — fast
+cases on 8x8 in tier-1, the 16x16 scale smoke under ``-m slow``."""
+
+import numpy as np
+import pytest
+
+from repro.comap import (Region, arbitrate, co_map, merge_mappings,
+                         partition)
+from repro.core import (CGRAConfig, make_cnkm, make_loop_kernel,
+                        make_reduction, make_stencil, map_dfg)
+from repro.core.conflict import QUAD, TIN, TOUT, Vertex
+from repro.core.tec import COL, ROW
+from repro.core.validate import validate_mapping
+
+BIG = CGRAConfig(rows=16, cols=16)
+
+
+# ------------------------------------------------------------- geometry
+@pytest.mark.parametrize("weights", [[1.0], [3, 5], [10, 7, 4], [1] * 6])
+def test_partition_disjoint_cover(weights):
+    regions = partition(BIG, weights)
+    assert len(regions) == len(weights)
+    cells = set()
+    for r in regions:
+        for rr in r.row_span:
+            for cc in r.col_span:
+                assert (rr, cc) not in cells
+                cells.add((rr, cc))
+        assert r.n_pes >= 1
+    assert len(cells) == BIG.n_pes          # exact tiling
+    for i, a in enumerate(regions):
+        for b in regions[i + 1:]:
+            assert not a.overlaps(b)
+
+
+def test_partition_area_tracks_weight():
+    r_small, r_big = partition(BIG, [1, 7])
+    assert r_big.n_pes > r_small.n_pes
+
+
+def test_region_config_and_translation():
+    reg = Region(r0=4, c0=8, rows=4, cols=8)
+    cfg = reg.config(BIG, grf=2)
+    assert (cfg.rows, cfg.cols, cfg.grf) == (4, 8, 2)
+    assert cfg.lrf == BIG.lrf and cfg.buses_per_scope == BIG.buses_per_scope
+    tin = Vertex(0, 7, TIN, 1, 1, port=2, mode="bus")
+    tout = Vertex(1, 8, TOUT, 2, 0, port=3)
+    quad = Vertex(2, 9, QUAD, 2, 0, pe=(1, 5), drive=(COL, 5))
+    assert reg.translate_vertex(tin).port == 6          # 4 + 2
+    assert reg.translate_vertex(tout).port == 11        # 8 + 3
+    gq = reg.translate_vertex(quad, op=42)
+    assert gq.pe == (5, 13) and gq.drive == (COL, 13) and gq.op == 42
+    rq = Vertex(3, 9, QUAD, 2, 0, pe=(0, 0), drive=(ROW, 0))
+    assert reg.translate_vertex(rq).drive == (ROW, 4)
+
+
+# -------------------------------------------------------------- arbiter
+def _map_pair(cgra, regions, dfgs, ii):
+    return [map_dfg(d, reg.config(cgra), min_ii=ii, max_ii=ii)
+            for d, reg in zip(dfgs, regions)]
+
+
+def test_arbiter_accepts_diagonal_regions():
+    """Diagonal regions share no rows and no columns, so no port or bus
+    scope is common — the arbiter must find nothing to flag."""
+    cgra = CGRAConfig(rows=8, cols=8)
+    regions = [Region(0, 0, 4, 4), Region(4, 4, 4, 4)]
+    results = _map_pair(cgra, regions, [make_cnkm(2, 4), make_cnkm(2, 4)],
+                        ii=1)
+    assert all(r.ok for r in results)
+    rep = arbitrate(regions, results, cgra)
+    assert rep.ok, rep.conflicts
+
+
+def test_arbiter_flags_forced_port_clash():
+    """Side-by-side regions share their rows; mapping the same kernel at
+    the same seed in both yields mirror-image placements whose fixed
+    IPORT/IBUS claims collide."""
+    cgra = CGRAConfig(rows=4, cols=8)
+    regions = [Region(0, 0, 4, 4), Region(0, 4, 4, 4)]
+    results = _map_pair(cgra, regions, [make_cnkm(2, 4), make_cnkm(2, 4)],
+                        ii=1)
+    assert all(r.ok for r in results)
+    rep = arbitrate(regions, results, cgra)
+    assert not rep.ok
+    assert any("fixed claim clash" in c for c in rep.conflicts)
+    assert rep.implicated == {0, 1}
+
+
+def test_merge_replays_through_validator():
+    cgra = CGRAConfig(rows=8, cols=8)
+    regions = [Region(0, 0, 4, 4), Region(4, 4, 4, 4)]
+    dfgs = [make_cnkm(2, 4), make_cnkm(1, 2)]
+    results = _map_pair(cgra, regions, dfgs, ii=1)
+    assert all(r.ok for r in results)
+    sched, placement = merge_mappings(regions, results)
+    assert len(sched.dfg.ops) == sum(len(r.sched.dfg.ops) for r in results)
+    assert len(placement) == len(sched.dfg.ops)
+    report = validate_mapping(sched, cgra, placement)
+    assert report.ok, report.violations
+    # PE occupancy stays region-disjoint after translation.
+    for oid, v in placement.items():
+        if v.kind == QUAD:
+            reg = regions[0] if oid < len(results[0].sched.dfg.ops) \
+                else regions[1]
+            assert v.pe[0] in reg.row_span and v.pe[1] in reg.col_span
+
+
+# ----------------------------------------------------------- end-to-end
+def test_co_map_two_kernels_8x8():
+    cgra = CGRAConfig(rows=8, cols=8)
+    cm = co_map([make_cnkm(2, 4), make_stencil(points=4, taps=3)], cgra,
+                max_ii=8)
+    assert cm.ok, cm.summary()
+    assert cm.report is not None and cm.report.ok
+    assert len({r.ii for r in cm.results}) == 1     # common II
+    # merged binding is complete: every op of every kernel is placed
+    assert len(cm.placement) == len(cm.sched.dfg.ops)
+
+
+def test_co_map_rejects_empty():
+    with pytest.raises(ValueError):
+        co_map([], BIG)
+
+
+def test_co_map_failure_reports_state():
+    """An impossible ask (kernel bigger than its region share at every
+    II) fails cleanly with per-region results preserved."""
+    tiny = CGRAConfig(rows=2, cols=2)
+    cm = co_map([make_cnkm(2, 6), make_cnkm(2, 6)], tiny, max_ii=3)
+    assert not cm.ok
+    assert cm.report is None           # never reached a merged replay
+    assert len(cm.regions) == 2
+
+
+# ---------------------------------------------------------- 16x16 scale
+@pytest.mark.slow
+def test_co_map_16x16_generated_kernels():
+    """The acceptance scenario: two and three generated kernels
+    co-mapped on a 16x16 PEA, merged binding replayed through the
+    validator."""
+    from repro.core import COMAP_16X16_SPECS
+    k1, k2, st = (spec.build() for spec in COMAP_16X16_SPECS)
+    cm = co_map([k1, k2], BIG, max_ii=10, max_bus_fanout=4,
+                mis_restarts=4, mis_iters=4000)
+    assert cm.ok, cm.summary()
+    assert cm.report.ok
+    assert max(d.rec_mii() for d in (k1, k2)) > 1   # RecMII exercised
+    cm3 = co_map([k1, k2, st], BIG, max_ii=10, max_bus_fanout=4,
+                 mis_restarts=4, mis_iters=4000)
+    assert cm3.ok, cm3.summary()
+    assert cm3.report.ok
+    assert len(cm3.regions) == 3
+
+
+@pytest.mark.slow
+def test_co_map_16x16_mixed_families():
+    cm = co_map([make_loop_kernel(n_chains=4, chain_len=4, n_carries=1,
+                                  seed=2),
+                 make_reduction(width=8),
+                 make_stencil(points=4, taps=3)],
+                BIG, max_ii=10, max_bus_fanout=4,
+                mis_restarts=4, mis_iters=4000)
+    assert cm.ok, cm.summary()
+    assert cm.report.ok

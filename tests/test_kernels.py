@@ -140,3 +140,44 @@ def test_conflict_matrix_pallas_sweep():
         out = np.asarray(conflict_matrix_pallas(
             jnp.asarray(feat), block=blk, interpret=True)).astype(bool)
         assert (out == ref).all()
+
+
+def test_conflict_matrix_packed_matches_bitset_rows():
+    """Packed-word kernel variant: uint32 tiles viewed as uint64 rows
+    must equal `pack_bool_rows` of the dense-bool oracle, and the
+    `build_conflict_graph(use_kernel="packed")` path must reproduce the
+    engine's bitset rows byte-for-byte."""
+    import numpy as onp
+
+    from repro.core import make_cnkm, schedule_dfg
+    from repro.core.bitset import n_words, pack_bool_rows
+    from repro.core.cgra import CGRAConfig
+    from repro.core.conflict import build_conflict_graph
+    from repro.kernels.conflict_matrix.kernel import \
+        conflict_matrix_packed_pallas
+    from repro.kernels.conflict_matrix.ops import conflict_matrix_packed
+    from repro.kernels.conflict_matrix.ref import (conflict_matrix_ref,
+                                                   encode)
+    for (n, m, bi, bj) in [(2, 4, 32, 64), (2, 6, 64, 128),
+                           (4, 4, 128, 256)]:
+        sched = schedule_dfg(make_cnkm(n, m), CGRAConfig())
+        cg = build_conflict_graph(sched, CGRAConfig())
+        feat = encode(cg.vertices)
+        ref_rows = pack_bool_rows(conflict_matrix_ref(feat))
+        w32 = onp.ascontiguousarray(onp.asarray(conflict_matrix_packed_pallas(
+            jnp.asarray(feat), block_i=bi, block_j=bj, interpret=True)))
+        rows = w32.view(onp.uint64)[:, :n_words(len(cg.vertices))]
+        assert (rows == ref_rows).all()
+        # host path (no pallas) packs the oracle
+        assert (conflict_matrix_packed(cg.vertices) == ref_rows).all()
+
+
+def test_conflict_matrix_packed_feeds_bitset_graph():
+    from repro.core import make_cnkm, schedule_dfg
+    from repro.core.cgra import CGRAConfig
+    from repro.core.conflict import build_conflict_graph
+    sched = schedule_dfg(make_cnkm(2, 6), CGRAConfig())
+    ref = build_conflict_graph(sched, CGRAConfig())
+    packed = build_conflict_graph(sched, CGRAConfig(), use_kernel="packed")
+    assert (packed.bits.rows == ref.bits.rows).all()
+    assert packed.n_edges == ref.n_edges

@@ -1,0 +1,166 @@
+"""Synthetic workload generator (core/workloads.py) + the loop-carried
+mapping path it exercises for the first time: RecMII computation, end-to-
+end maps of distance >= 1 kernels, the scheduler's recurrence post-check,
+the validator's recurrence violation, and the GRF park window for
+inter-iteration consumers on a *generated cyclic* graph (the PR 2 fix
+regressed only on hand-built DFGs before)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (CGRAConfig, generate, make_loop_kernel,
+                        make_reduction, make_stencil, map_dfg, mii,
+                        schedule_dfg, sweep_specs)
+from repro.core.dfg import OpKind
+from repro.core.validate import validate_mapping
+
+CGRA = CGRAConfig()
+
+
+# ------------------------------------------------------------- families
+def test_registry_and_determinism():
+    for spec in sweep_specs("4x4"):
+        d1, d2 = spec.build(), spec.build()
+        assert len(d1.ops) == len(d2.ops)
+        assert [(e.src, e.dst, e.distance) for e in d1.edges] == \
+            [(e.src, e.dst, e.distance) for e in d2.edges]
+        d1.topo_order()          # no intra-iteration cycles
+    with pytest.raises(KeyError):
+        generate("nope")
+
+
+def test_loop_kernel_exercises_rec_mii():
+    d = make_loop_kernel(n_chains=4, chain_len=4, n_carries=2,
+                         max_distance=1, seed=0)
+    # distance-1 back edge over a 4-op chain: RecMII = 4.
+    assert d.rec_mii() == 4
+    assert any(e.distance >= 1 for e in d.edges)
+    d2 = make_loop_kernel(n_carries=0, seed=0)
+    assert d2.rec_mii() == 1
+
+
+def test_loop_kernel_single_vio_pred_invariant():
+    """At most one VIO predecessor per compute op — the fabric can only
+    deliver one bus datum per consumer row pinning (see workloads.py)."""
+    d = make_loop_kernel(n_chains=5, chain_len=6, n_inputs=4, seed=3)
+    vins = set(d.v_i)
+    for c in d.v_r:
+        assert sum(1 for p in d.predecessors(c) if p in vins) <= 1
+
+
+def test_vout_producers_distinct():
+    d = make_loop_kernel(n_chains=3, chain_len=3, n_outputs=3, seed=1)
+    prods = [d.predecessors(v)[0] for v in d.v_o]
+    assert len(prods) == len(set(prods))
+
+
+def test_stencil_reuse_profile():
+    d = make_stencil(points=4, taps=3)
+    rds = sorted(d.rd(v) for v in d.v_i)
+    assert rds[0] == 1 and rds[-1] == 3    # sliding-window RD profile
+    assert len(d.v_o) == 4
+
+
+def test_reduction_shape():
+    d = make_reduction(width=8, arity=2)
+    assert len(d.v_i) == 8 and len(d.v_o) == 1
+    assert len(d.v_r) == 8 + 7             # leaves + tree
+
+
+# ----------------------------------------------- loop-carried end-to-end
+@pytest.mark.parametrize("seed", range(3))
+def test_map_loop_kernel_end_to_end(seed):
+    d = make_loop_kernel(seed=seed)
+    r = map_dfg(d, CGRA, max_ii=10)
+    assert r.ok, r.summary()
+    assert r.mii >= d.rec_mii()
+    assert r.report.ok
+    # the mapped schedule respects every loop-carried edge
+    sched = r.sched
+    for e in sched.dfg.edges:
+        if e.distance:
+            assert (sched.time[e.dst] + e.distance * sched.ii
+                    >= sched.time[e.src] + sched.dfg.ops[e.src].latency)
+
+
+def test_scheduler_rejects_recurrence_violations():
+    """A one-op cycle of latency 3 at distance 1 cannot schedule below
+    II=3; schedule_dfg must escalate instead of emitting an invalid
+    schedule (the pre-PR behaviour silently violated the recurrence)."""
+    from repro.core.dfg import DFG
+    d = DFG()
+    a = d.add_op(OpKind.COMPUTE, latency=3)
+    b = d.add_op(OpKind.COMPUTE)
+    d.add_edge(a, b)
+    d.add_edge(b, a, distance=1)
+    sched = schedule_dfg(d, CGRA)
+    assert sched.ii >= 4            # lat(a)+lat(b) = 4 over distance 1
+    assert mii(d, CGRA) == 4
+
+
+def test_validator_flags_recurrence_violation():
+    """Same-PE (LRF) consumers of a violated back edge used to pass
+    silently — the park interval was empty, not negative."""
+    from repro.core.conflict import QUAD, Vertex
+    from repro.core.dfg import DFG
+    from repro.core.schedule import ScheduledDFG
+    d = DFG()
+    a = d.add_op(OpKind.COMPUTE, latency=3)
+    b = d.add_op(OpKind.COMPUTE)
+    d.add_edge(a, b)
+    d.add_edge(b, a, distance=1)
+    # Hand-built II=2 schedule violating the recurrence b->a.
+    sched = ScheduledDFG(d, 2, 2, {a: 0, b: 3}, {}, {})
+    placement = {a: Vertex(-1, a, QUAD, 0, 0, pe=(0, 0)),
+                 b: Vertex(-1, b, QUAD, 3, 1, pe=(0, 0))}
+    report = validate_mapping(sched, CGRA, placement)
+    assert any("recurrence violated" in v for v in report.violations)
+
+
+def test_grf_park_window_on_generated_cyclic_kernel():
+    """End-to-end GRF regression on a *generated* cyclic graph: an
+    inter-iteration VIO consumer at distance d parks the datum d*II
+    extra cycles (PR 2 counted the successor slot only)."""
+    d = make_loop_kernel(n_chains=5, chain_len=3, n_inputs=3,
+                         n_carries=1, max_distance=1,
+                         vin_carry_distance=2, seed=0)
+    dist_edges = [e for e in d.edges if e.distance == 2
+                  and d.ops[e.src].kind == OpKind.VIN]
+    assert dist_edges, "generator must emit the inter-iteration VIO edge"
+    cgra = CGRAConfig(grf=8)
+    r = map_dfg(d, cgra, max_ii=10)
+    assert r.ok, r.summary()
+    vin = dist_edges[0].src
+    # RD = 5 > M = 4 parks the VIOs in the GRF; the distance-2 consumer
+    # then holds the datum 2*II extra cycles, so the park window spans
+    # several modulo slots (PR 2 counted the successor slot only).
+    assert r.sched.delivery.get(vin) == "grf"
+    assert r.report.grf_peak >= 2
+    assert r.report.ok
+
+
+# ------------------------------------------------------------ 8x8 sweep
+def test_sweep_specs_map_on_8x8():
+    cgra = CGRAConfig(rows=8, cols=8)
+    for spec in sweep_specs("8x8"):
+        r = map_dfg(spec.build(), cgra, max_ii=10, mis_restarts=4,
+                    mis_iters=4000, max_bus_fanout=4)
+        assert r.ok, f"{spec.name}: {r.summary()}"
+
+
+@pytest.mark.parametrize("mode", ["bandmap", "busmap"])
+def test_clone_and_route_rewiring_preserves_distance(mode):
+    """Multi-port VIO clone splits (bandmap) and routing-PE insertion
+    (busmap) rewire consumer edges; the iteration distance must ride
+    along or inter-iteration consumers silently become intra-iteration
+    (validator and park windows would never see the real distance)."""
+    d = make_loop_kernel(n_chains=5, chain_len=3, n_inputs=3,
+                         n_carries=1, max_distance=1,
+                         vin_carry_distance=2, seed=0)
+    assert sum(1 for e in d.edges if e.distance == 2) == 1
+    # grf=0: RD = 5 > M = 4 forces the split/route path.
+    sched = schedule_dfg(d, CGRA, mode=mode)
+    kept = [e for e in sched.dfg.edges if e.distance == 2]
+    assert kept, f"{mode}: rewiring dropped the inter-iteration edge"
+    src = sched.dfg.ops[kept[0].src]
+    assert src.kind in (OpKind.VIN, OpKind.ROUTE)
