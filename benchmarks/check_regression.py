@@ -1,8 +1,9 @@
 """Bench-regression gate for CI: diff a fresh ``bench_mis.json`` against
 the committed baseline and fail on a >2x wall-time regression of any
-kernel (kernel_table, straggler, cgra_8x8 and comap rows are all keyed
-by (kernel, mode) — the comap section gates the 16x16 scale and the
-multi-kernel co-mapping path).
+kernel (kernel_table, straggler, cgra_8x8, comap and group_move rows are
+all keyed by (kernel, mode) — the comap section gates the 16x16 scale
+and the multi-kernel co-mapping path, group_move the kick
+neighbourhood's flag-on/off engine comparison).
 
   python benchmarks/check_regression.py \
       --baseline /tmp/bench_baseline.json \
@@ -10,8 +11,11 @@ multi-kernel co-mapping path).
 
 Sub-``--floor``-second entries are compared against the floor instead of
 their raw baseline so scheduler noise on millisecond-scale maps cannot
-trip the gate.  Missing keys on either side are reported but do not fail
-(new kernels appear, old ones retire); a slower-than-2x row does.
+trip the gate.  Individual rows missing on either side are reported but
+do not fail (new kernels appear, old ones retire); a whole *section*
+present in the baseline but absent from the fresh JSON fails loudly —
+that is a benchmark that silently stopped running, not a retired
+kernel.  A slower-than-2x row also fails.
 
 The committed baseline is produced on a developer machine while the gate
 runs on shared CI runners, so raw wall-clock comparison would conflate
@@ -30,9 +34,13 @@ import json
 import sys
 
 
+SECTIONS = ("kernel_table", "straggler", "cgra_8x8", "comap",
+            "group_move")
+
+
 def _rows(bench: dict) -> dict[tuple, float]:
     out = {}
-    for section in ("kernel_table", "straggler", "cgra_8x8", "comap"):
+    for section in SECTIONS:
         for row in bench.get(section, []):
             out[(section, row["kernel"], row["mode"])] = row["wall_s"]
     return out
@@ -41,6 +49,12 @@ def _rows(bench: dict) -> dict[tuple, float]:
 def check(baseline: dict, fresh: dict, factor: float = 2.0,
           floor: float = 0.2) -> list[str]:
     old, new = _rows(baseline), _rows(fresh)
+    failures = []
+    for section in SECTIONS:
+        if baseline.get(section) and not fresh.get(section):
+            failures.append(
+                f"section {section!r} present in baseline but missing "
+                f"from fresh run — a benchmark silently stopped running")
     scale = 1.0
     ref_old = baseline.get("engine_speedup", {}).get("seed_solve_s")
     ref_new = fresh.get("engine_speedup", {}).get("seed_solve_s")
@@ -48,7 +62,6 @@ def check(baseline: dict, fresh: dict, factor: float = 2.0,
         scale = max(ref_new / ref_old, 1.0)
         print(f"machine-speed scale (frozen seed solver "
               f"{ref_old:.2f}s -> {ref_new:.2f}s): x{scale:.2f}")
-    failures = []
     for key in sorted(old.keys() | new.keys()):
         section, kernel, mode = key
         if key not in old or key not in new:

@@ -231,6 +231,14 @@ def bench_mis_engine(quick: bool = False):
     for row in bench["comap"]:
         rows.append([f"{row['mode']}_{row['kernel']}_wall_s",
                      row["wall_s"]])
+    for row in bench["group_move"]:
+        rows.append([f"group_move_{row['kernel']}_{row['mode']}_wall_s",
+                     row["wall_s"]])
+        cov = row.get("coverage")
+        if isinstance(cov, dict):
+            last = sorted(cov, key=int)[-1]
+            rows.append([f"group_move_{row['kernel']}_{row['mode']}_"
+                         f"coverage@{last}", f"{cov[last]}/{row['n_ops']}"])
     return _emit("mis_engine", ["name", "value"], rows)
 
 

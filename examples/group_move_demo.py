@@ -1,0 +1,48 @@
+"""Group-move neighbourhood demo: mapping a tightly-coupled kernel.
+
+The workload is 8 high-fan-out VIOs, each bus-feeding 8 consumers on an
+8x8 PEA (the consumer slot is exactly packed), with two consumer lanes
+chained across groups.  Bus delivery pins a whole group to its VIO's
+row, so a cold-started swap search packs the computes with each group's
+consumers scattered over rows — after which no single-vertex move can
+place any VIO: the ~90 % coverage stall.  The portfolio's group-move
+kick (`GroupMoveConfig`) ejects the whole blocking cluster and
+re-places it atomically.
+
+  PYTHONPATH=src python examples/group_move_demo.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import (CGRAConfig, GroupMoveConfig,       # noqa: E402
+                        make_tightly_coupled, map_dfg)
+
+cgra = CGRAConfig(rows=8, cols=8)
+dfg = make_tightly_coupled(n_vios=8, fanout=8, cross_links=2,
+                           link_run=6, seed=0)
+print(f"tightly-coupled kernel: {dfg}")
+
+kw = dict(certify=False, mis_restarts=4, mis_iters=2500,
+          min_ii=2, max_ii=2, seed=0)
+
+t0 = time.perf_counter()
+r_off = map_dfg(dfg, cgra, **kw)
+t_off = time.perf_counter() - t0
+print(f"\n(1,1)-swap portfolio : ok={r_off.ok}  coverage "
+      f"{r_off.mis_size}/{r_off.n_ops}  ({t_off:.1f}s)")
+
+t0 = time.perf_counter()
+r_on = map_dfg(dfg, cgra, group_move=GroupMoveConfig(), **kw)
+t_on = time.perf_counter() - t0
+print(f"with group-move kick : ok={r_on.ok}  coverage "
+      f"{r_on.mis_size}/{r_on.n_ops}  II={r_on.ii}  ({t_on:.1f}s)")
+
+rows = {}
+for oid, v in r_on.placement.items():
+    if v.kind == "tin":
+        rows[r_on.sched.dfg.ops[oid].name] = v.port
+print(f"\nVIO -> row assignment of the valid binding: {rows}")
+print("knobs: GroupMoveConfig(cadence=40, max_cluster=24, tenure=30)")

@@ -9,20 +9,23 @@ from .cgra import CGRAConfig
 from .dfg import DFG, Edge, Op, OpKind
 from .kernels_cnkm import (EXTRA_KERNELS, PAPER_KERNELS,
                            all_paper_kernels, cnkm_name, make_cnkm)
-from .mis import greedy_mis, solve_mis, solve_mis_portfolio
+from .mis import (GroupMoveConfig, greedy_mis, solve_mis,
+                  solve_mis_portfolio)
 from .schedule import ScheduledDFG, mii, res_mii, schedule_dfg
 from .tec import TEC
 from .workloads import (COMAP_16X16_SPECS, WorkloadSpec, generate,
                         make_loop_kernel, make_reduction, make_stencil,
-                        scale_16x16_loop, sweep_specs)
+                        make_tightly_coupled, scale_16x16_loop,
+                        sweep_specs)
 
 __all__ = [
     "MappingResult", "compare_modes", "map_dfg", "BitsetGraph",
     "IICertificate", "certify_ii_infeasible",
     "CGRAConfig", "DFG", "Edge", "Op", "OpKind", "EXTRA_KERNELS",
     "PAPER_KERNELS", "all_paper_kernels", "cnkm_name", "make_cnkm",
-    "greedy_mis", "solve_mis", "solve_mis_portfolio", "ScheduledDFG",
-    "mii", "res_mii", "schedule_dfg", "TEC",
+    "GroupMoveConfig", "greedy_mis", "solve_mis", "solve_mis_portfolio",
+    "ScheduledDFG", "mii", "res_mii", "schedule_dfg", "TEC",
     "COMAP_16X16_SPECS", "WorkloadSpec", "generate", "make_loop_kernel",
-    "make_reduction", "make_stencil", "scale_16x16_loop", "sweep_specs",
+    "make_reduction", "make_stencil", "make_tightly_coupled",
+    "scale_16x16_loop", "sweep_specs",
 ]

@@ -19,8 +19,8 @@ from .cgra import CGRAConfig
 from .conflict import (ConflictGraph, Vertex, build_conflict_graph,
                        constructive_init)
 from .dfg import DFG
-from .mis import (ROW_CACHE_LIMIT, PortfolioSBTS, ejection_repair,
-                  mis_indices)
+from .mis import (ROW_CACHE_LIMIT, GroupMoveConfig, PortfolioSBTS,
+                  ejection_repair, mis_indices)
 from .schedule import ScheduledDFG, mii, schedule_dfg
 from .validate import ValidationReport, validate_mapping
 
@@ -67,7 +67,9 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
             certify_budget: int = 200_000,
             n_exact_placements: int = 4,
             row_cache_limit: int | None = None,
-            max_bus_fanout: int | None = None) -> MappingResult:
+            max_bus_fanout: int | None = None,
+            group_move: GroupMoveConfig | bool | None = None
+            ) -> MappingResult:
     """Run the full 4-phase mapping.  Phase 4 (incomplete-mapping
     processing) = MIS restarts with fresh seeds, re-scheduling with jitter
     (ASAP schedules are II-invariant, so jitter supplies the diversity),
@@ -92,11 +94,23 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
     per-move-unpack fallback.  ``max_bus_fanout`` caps the consumers
     served per delivery port (see `schedule._Scheduler`): on wide
     arrays the physical M pins whole fan-outs to one row, and capping
-    it restores the multi-port split a narrow array would have used."""
+    it restores the multi-port split a narrow array would have used.
+
+    ``group_move`` enables the portfolio's clustered kick neighbourhood
+    (`mis.GroupMoveConfig`; ``True`` = defaults, ``None``/``False`` =
+    off).  Off is the default and keeps the portfolio bit-identical to
+    the flag-less engine; on, the kick periodically ejects and
+    re-places whole blocking clusters — the move the tightly-coupled
+    workloads (a VIO's bus-fed consumers spread over rows) need to
+    escape their ~90 % coverage stall."""
     t_start = _time.perf_counter()
     the_mii = mii(dfg, cgra)
     cache_limit = ROW_CACHE_LIMIT if row_cache_limit is None \
         else row_cache_limit
+    if group_move is True:
+        group_move = GroupMoveConfig()
+    elif group_move is False:
+        group_move = None
     attempts = 0
     certificates: list[IICertificate] = []
     last: tuple = (None, None, None, 0, (0, 0))
@@ -162,15 +176,15 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
             inits = [constructive_init(cg, sched, cgra, seed=base + k)
                      if k % 3 != 2 else None for k in range(budget)]
             attempts += budget
+            op_of = cg.op_of
             sbts = PortfolioSBTS(cg.bits, inits, seed=base,
                                  row_cache=shared_u8,
-                                 row_cache_limit=cache_limit)
+                                 row_cache_limit=cache_limit,
+                                 op_of=op_of, group_move=group_move)
             # Repair retries reuse the same cache; when the graph was too
             # big for it, row_cache() materialises one lazily so the
             # retries don't each re-unpack n² rows.
             row_cache = shared_u8
-            op_of = np.fromiter((v.op for v in cg.vertices),
-                                dtype=np.int64, count=cg.n)
             seen_sols: set[bytes] = set()
             remaining = mis_iters
             # Harvest rounds: run the portfolio until some seed covers all

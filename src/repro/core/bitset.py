@@ -179,6 +179,22 @@ class BitsetGraph:
         return np.bitwise_count(self.rows & s_words).sum(
             axis=1, dtype=np.int64)
 
+    def union_rows(self, vs) -> np.ndarray:
+        """Packed neighbourhood union ∪_{v ∈ vs} N(v) — one OR-reduce
+        over the gathered rows, no per-vertex python loop."""
+        vs = np.asarray(vs, dtype=np.int64)
+        if vs.size == 0:
+            return make_set(self.n)
+        return np.bitwise_or.reduce(self.rows[vs], axis=0)
+
+    def cluster_members(self, vs, s_words: np.ndarray) -> np.ndarray:
+        """Conflict cluster of the candidate set ``vs`` against the
+        selection ``s_words``: indices of every selected vertex adjacent
+        to at least one of ``vs``.  This is the group-move neighbourhood's
+        extraction primitive — for an unplaced op it names exactly the
+        placements that pin it out, in one AND over the packed union."""
+        return indices(self.union_rows(vs) & s_words, self.n)
+
     def any_conflict(self, s_words: np.ndarray) -> bool:
         """Does any member of S have a neighbour in S?"""
         members = indices(s_words, self.n)

@@ -96,6 +96,13 @@ class ConflictGraph:
             self._adj = self.bits.to_dense()
         return self._adj
 
+    @property
+    def op_of(self) -> np.ndarray:
+        """Vertex -> op id, ``int64 [n]`` (what the portfolio's group
+        moves and the repair pass key their clusters on)."""
+        return np.fromiter((v.op for v in self.vertices),
+                           dtype=np.int64, count=self.n)
+
 
 def _occupancy(v: Vertex, ii: int) -> list[tuple]:
     """Unconditional resource instances occupied by a candidate."""

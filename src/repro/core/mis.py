@@ -24,6 +24,7 @@ Two entry points:
 
 from __future__ import annotations
 
+import dataclasses
 import math as _math
 
 import numpy as np
@@ -33,6 +34,39 @@ from .bitset import BitsetGraph, as_bitset_graph, pack_bool
 # Unpacked-row caches ([n, n] uint8) are materialised only below this
 # byte bound; larger graphs fall back to per-move unpack.
 ROW_CACHE_LIMIT = 1 << 25
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupMoveConfig:
+    """Knobs for the clustered group-move ("kick") neighbourhood.
+
+    The (1,1) swap neighbourhood moves one vertex at a time, so a VIO
+    whose bus-fed consumers ended up spread over several rows can never
+    be repaired: every candidate of the unplaced op conflicts with >= 2
+    selected vertices at once, and the portfolio stalls just below full
+    coverage.  The kick ejects the *whole* blocking cluster — the
+    unplaced op's conflicting placements, discovered from the packed
+    adjacency in one union-AND (`BitsetGraph.cluster_members`) — and
+    re-inserts the cluster's ops atomically at a different row/slot
+    assignment, with the ejected placements tabu'd for ``tenure``
+    iterations so the seed cannot immediately rebuild the local minimum.
+
+    ``cadence``     — kick every this many portfolio super-iterations
+                      (the kick replaces that iteration's swap, so the
+                      flag-on/off iteration budgets stay comparable).
+    ``max_cluster`` — cap on the number of ops ejected per kick; a
+                      candidate blocked by more ops than this is not
+                      kicked (the cluster for a stalled VIO is its
+                      target row's occupants plus its own stray
+                      consumers, ~rows + fanout ops).
+    ``tenure``      — tabu tenure applied to ejected placements; longer
+                      than the swap tenure so a kick outlives the swap
+                      phase's churn.
+    """
+    enabled: bool = True
+    cadence: int = 40
+    max_cluster: int = 24
+    tenure: int = 30
 
 
 def greedy_mis(adj, rng: np.random.Generator) -> np.ndarray:
@@ -67,7 +101,9 @@ class PortfolioSBTS:
 
     def __init__(self, g: BitsetGraph, inits, *, tenure: int = 7,
                  seed: int = 0, row_cache: np.ndarray | None = None,
-                 row_cache_limit: int | None = None):
+                 row_cache_limit: int | None = None,
+                 op_of: np.ndarray | None = None,
+                 group_move: "GroupMoveConfig | None" = None):
         self.g = g
         self.k = len(inits)
         self.tenure = tenure
@@ -116,6 +152,28 @@ class PortfolioSBTS:
             self._u8 = g.rows_u8(np.arange(n)) \
                 if 0 < n * n <= self.row_cache_limit else None
         self._u8_ext: np.ndarray | None = None  # row_cache() overflow copy
+        # Group-move neighbourhood (off by default).  Everything below is
+        # inert when disabled: the main loop's state arrays, RNG stream
+        # and move sequence are untouched, so flag-off trajectories stay
+        # bit-identical to a solver constructed without these arguments.
+        self._gm = group_move if group_move is not None \
+            and group_move.enabled else None
+        if self._gm is not None and op_of is None:
+            raise ValueError("group_move requires op_of (vertex -> op)")
+        if op_of is not None:
+            op_of = np.asarray(op_of, dtype=np.int64)
+            _, self._op_idx = np.unique(op_of, return_inverse=True)
+            self._n_ops = int(self._op_idx.max()) + 1 if n else 0
+            order = np.argsort(self._op_idx, kind="stable")
+            bounds = np.searchsorted(self._op_idx[order],
+                                     np.arange(1, self._n_ops))
+            self._op_cands = np.split(order, bounds)
+        else:
+            self._op_idx = None
+        # Separate RNG stream: kicks never advance the main generator, so
+        # enabling the flag perturbs only the iterations it fires on.
+        self._gm_rng = np.random.default_rng(
+            (seed * 2654435761 + 0x9E3779B9) & 0x7FFFFFFFFFFFFFFF)
 
     def row_cache(self) -> np.ndarray:
         """Unpacked 0/1 adjacency ``uint8 [n, n]``, shared with callers
@@ -149,6 +207,16 @@ class PortfolioSBTS:
         for _ in range(max_iters):
             self.it += 1
             it = self.it
+            # Periodic group-move kick: spend this iteration ejecting and
+            # atomically re-placing a blocking cluster per stalled seed
+            # (see GroupMoveConfig).  Counts against the iteration budget
+            # so flag-on/off runs compare at equal budgets.
+            if self._gm is not None and it % self._gm.cadence == 0:
+                self._group_kick(target)
+                if target is not None and \
+                        (self.best_size >= target).any():
+                    return self.best
+                continue
             # Add moves appear only after evictions free a vertex's whole
             # neighbourhood — probe for them periodically (and right
             # after perturb/rearm/reset) instead of every iteration; a
@@ -257,16 +325,32 @@ class PortfolioSBTS:
         the mapping validator rejected it): restart from the best set
         minus a random slice, tabu the evicted vertices so the seed does
         not immediately rebuild the same solution, and reset the best
-        tracking so the target early-exit re-arms."""
+        tracking so the target early-exit re-arms.
+
+        With group moves enabled the random slice (and ``frac``) is
+        replaced by a coherent cluster eviction (`_rearm_cluster`,
+        capped at the kick's ``max_cluster``) — moving a coupled group
+        together diversifies tightly-coupled instances where a random
+        slice would be rebuilt verbatim."""
         self.in_s[k] = self.best[k]
         members = np.flatnonzero(self.in_s[k])
         if members.size:
-            evict = self.rng.choice(
-                members, size=max(1, int(members.size * frac)),
-                replace=False)
-            self.in_s[k, evict] = False
-            self.tabu[k, evict] = self.it + 3 * self.tenure + \
-                self.rng.integers(0, 10)
+            if self._gm is not None:
+                # Clustered re-placement: evict a coherent blocking
+                # cluster around one random placement instead of a
+                # random slice — a diversification that actually moves
+                # coupled groups (VIO + row-pinned consumers) together.
+                evict = self._rearm_cluster(k, members)
+                self.in_s[k, evict] = False
+                self.tabu[k, evict] = self.it + self._gm.tenure + \
+                    int(self._gm_rng.integers(0, 10))
+            else:
+                evict = self.rng.choice(
+                    members, size=max(1, int(members.size * frac)),
+                    replace=False)
+                self.in_s[k, evict] = False
+                self.tabu[k, evict] = self.it + 3 * self.tenure + \
+                    self.rng.integers(0, 10)
         self._resync(k)
 
     def reset_seed(self, k: int, init: np.ndarray | None = None) -> None:
@@ -314,6 +398,165 @@ class PortfolioSBTS:
             self.stall[k] = 0
             self._thresh[k] = 60 + self.rng.integers(0, 24)
             self._probe_adds = True
+
+    # ------------------------------------------------- group-move kick
+    def _eject(self, k: int, blockers: np.ndarray) -> None:
+        """Remove ``blockers`` from seed ``k`` and tabu their (old)
+        placements with the kick's tenure so the seed cannot
+        immediately rebuild the minimum it just escaped."""
+        self.in_s[k, blockers] = False
+        self.conf[k] -= self._rows(blockers).sum(
+            axis=0, dtype=self.conf.dtype)
+        self.size[k] -= blockers.size
+        self.tabu[k, blockers] = self.it + self._gm.tenure + \
+            self._gm_rng.integers(0, 8, blockers.size)
+
+    def _insert(self, k: int, v: int, fresh: np.ndarray) -> None:
+        self.in_s[k, v] = True
+        self.conf[k] += self._row(v)
+        self.size[k] += 1
+        fresh[v] = True
+
+    def _reinsert_cluster(self, k: int, ejected: list[int],
+                          budget: int, fresh: np.ndarray) -> None:
+        """Re-place the ejected cluster's ops atomically, most-
+        constrained-first.  A free non-tabu candidate is taken outright;
+        an op with none may recursively eject the blockers of its
+        cheapest candidate (second ring — e.g. the foreign occupants of
+        the row its re-placed VIO now pins it to) while ``budget`` ops
+        remain, except placements made by this very kick (``fresh``),
+        which are never undone.  Ops left unplaced when the budget runs
+        out stay uncovered for the swap/add phases to resume on;
+        independence is invariant throughout."""
+        it = self.it
+        pending = list(ejected)
+        guard = 4 * self._gm.max_cluster
+        while pending and guard > 0:
+            guard -= 1
+            counts = [int((self.conf[k, self._op_cands[p]] == 0).sum())
+                      for p in pending]
+            op = pending.pop(int(np.argmin(counts)))
+            c = self._op_cands[op]
+            ok = (self.conf[k, c] == 0) & ~self.in_s[k, c] & \
+                (self.tabu[k, c] <= it)
+            free = c[ok]
+            if free.size:
+                self._insert(
+                    k, int(free[self._gm_rng.integers(0, free.size)]),
+                    fresh)
+                continue
+            if budget <= 0:
+                continue
+            cand = c[self.tabu[k, c] <= it]
+            if cand.size == 0:
+                continue
+            costs = self.conf[k, cand] + self._gm_rng.random(cand.size)
+            for v in cand[np.argsort(costs, kind="stable")[:4]]:
+                v = int(v)
+                blockers = np.flatnonzero(self._row(v) & self.in_s[k])
+                if blockers.size > budget or fresh[blockers].any():
+                    continue
+                self._eject(k, blockers)
+                self._insert(k, v, fresh)
+                pending.extend(np.unique(self._op_idx[blockers]).tolist())
+                budget -= blockers.size
+                break
+
+    def _kick_seed(self, k: int, o: int, fresh: np.ndarray) -> bool:
+        """Group-move on seed ``k`` for uncovered op ``o``: choose the
+        candidate of ``o`` blocked by the fewest current placements
+        (``conf`` *is* the blocker-op count — an independent set holds
+        at most one vertex per op), eject **all** of its blockers — the
+        conflict cluster, e.g. a stalled VIO's consumers astray on other
+        rows — insert the candidate, and re-place the ejected ops around
+        it (with bounded second-ring ejections; `_reinsert_cluster`).
+        Placements made earlier in the same kick phase (``fresh``) are
+        never ejected, so successive kicks compose instead of undoing
+        each other.  Returns True when a move was applied."""
+        gm = self._gm
+        it = self.it
+        c = self._op_cands[o]
+        ok = self.tabu[k, c] <= it
+        if not ok.any():
+            return False
+        cand = c[ok]
+        costs = self.conf[k, cand] + self._gm_rng.random(cand.size)
+        for v in cand[np.argsort(costs, kind="stable")[:6]]:
+            v = int(v)
+            if self.conf[k, v] == 0:
+                # Free candidate: a plain add closes it, no ejection.
+                self._insert(k, v, fresh)
+                return True
+            blockers = np.flatnonzero(self._row(v) & self.in_s[k])
+            cluster = np.unique(self._op_idx[blockers])
+            if cluster.size > gm.max_cluster or fresh[blockers].any():
+                continue
+            self._eject(k, blockers)
+            self._insert(k, v, fresh)
+            self._reinsert_cluster(k, cluster.tolist(),
+                                   gm.max_cluster - cluster.size, fresh)
+            return True
+        return False
+
+    def _uncovered(self, k: int) -> np.ndarray:
+        members = np.flatnonzero(self.in_s[k])
+        covered = np.zeros(self._n_ops, dtype=bool)
+        covered[self._op_idx[members]] = True
+        return np.flatnonzero(~covered)
+
+    def _group_kick(self, target: int | None = None) -> None:
+        """Clustered re-placement pass: per seed, kick *every* uncovered
+        op once (in random order, including ops a second-ring ejection
+        newly uncovers), with the phase's own insertions protected from
+        ejection — so a coherent multi-group rebuild can reach full
+        coverage atomically instead of being churned away by the swap
+        iterations between two single-op kicks."""
+        for k in range(self.k):
+            if target is not None and self.best_size[k] >= target:
+                continue
+            if self.stall[k] * 2 < self._gm.cadence:
+                # The swap phase is still making progress on this seed;
+                # kicking now would pay the pass for nothing.
+                continue
+            queue = self._uncovered(k)
+            if queue.size == 0:
+                continue
+            self._gm_rng.shuffle(queue)
+            fresh = np.zeros(self.g.n, dtype=bool)
+            kicked = np.zeros(self._n_ops, dtype=bool)
+            queue = queue.tolist()
+            while queue:
+                o = queue.pop()
+                if kicked[o]:
+                    continue
+                kicked[o] = True
+                self._kick_seed(k, int(o), fresh)
+                if not queue:
+                    # Second-ring ejections may have uncovered new ops;
+                    # give each one kick in the same pass.
+                    queue = [o for o in self._uncovered(k)
+                             if not kicked[o]]
+            if self.size[k] > self.best_size[k]:
+                self.best_size[k] = self.size[k]
+                self.best[k] = self.in_s[k].copy()
+                self.stall[k] = 0
+        self._probe_adds = True
+
+    def _rearm_cluster(self, k: int, members: np.ndarray) -> np.ndarray:
+        """Cluster eviction for :meth:`rearm`: one random placement, a
+        random alternative candidate of its op, and every placement
+        blocking that alternative — the coupled group that has to move
+        together for the re-placement to land anywhere new."""
+        p = int(members[self._gm_rng.integers(0, members.size)])
+        c = self._op_cands[self._op_idx[p]]
+        v = int(c[self._gm_rng.integers(0, c.size)])
+        blockers = np.flatnonzero(self._row(v) & self.in_s[k])
+        cluster = np.union1d(np.unique(self._op_idx[blockers]),
+                             [self._op_idx[p]])
+        if cluster.size > self._gm.max_cluster:
+            cluster = self._gm_rng.choice(
+                cluster, size=self._gm.max_cluster, replace=False)
+        return members[np.isin(self._op_idx[members], cluster)]
 
 
 def solve_mis_portfolio(adj, *, inits, target: int | None = None,

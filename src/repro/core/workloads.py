@@ -194,11 +194,65 @@ def make_reduction(width: int = 8, arity: int = 2, *,
     return d
 
 
+def make_tightly_coupled(n_vios: int = 8, fanout: int = 8,
+                         cross_links: int = 2, n_outputs: int = 2, *,
+                         link_run: int = 4, seed: int = 0) -> DFG:
+    """Tightly-coupled kernel: high-fan-out VIOs whose consumer groups
+    are chained *across* groups — the family that stalls the (1,1)-swap
+    portfolio just below full coverage (the group-move regression
+    fixture).
+
+    ``n_vios`` VIOs each feed ``fanout`` consumers (one shared datum per
+    group: bus delivery pins the whole group to the VIO's row).  With
+    ``n_vios × fanout`` equal to the PE count, the consumer slot is
+    exactly packed, so a cold-started SBTS packs computes first — each
+    group's consumers scattered over many rows — and then no VIO has a
+    row candidate conflicting with fewer than ~``fanout`` placements:
+    the multi-vertex local minimum the ROADMAP describes ("a VIO whose
+    placed consumers span rows"), escapable by a group move but not by
+    (1,1) swaps.
+
+    ``cross_links`` of the ``fanout`` lanes additionally chain consumer
+    j of group i to consumer j of group i+1 over a run of ``link_run``
+    consecutive groups, forcing those lanes to share a column across
+    groups (cross-row consumer pressure).  Runs are kept short so that
+    any full-coverage placement stays within the per-column bus budget
+    at II=2 — ``link_run - 1`` chained transfers plus one VOO export fit
+    ``2 × II`` (bus, cycle) cells even when no two linked groups land on
+    adjacent rows (adjacent rows ride the free NSEW neighbour links).
+
+    ``seed`` shuffles which lanes carry the cross links and where each
+    run starts; the shape is otherwise deterministic.  Invariants
+    upheld: <= 1 VIO predecessor per op, distinct producers per VOO.
+    """
+    assert cross_links <= fanout
+    rng = np.random.default_rng(seed)
+    d = DFG()
+    vins = [d.add_op(OpKind.VIN, f"in{i}") for i in range(n_vios)]
+    groups = [[d.add_op(OpKind.COMPUTE, f"g{i}_{j}")
+               for j in range(fanout)] for i in range(n_vios)]
+    for i in range(n_vios):
+        for j in range(fanout):
+            d.add_edge(vins[i], groups[i][j])
+    lanes = list(range(fanout))
+    rng.shuffle(lanes)
+    run = min(link_run, n_vios)
+    for j in lanes[:cross_links]:
+        i0 = int(rng.integers(0, n_vios - run + 1))
+        for i in range(i0, i0 + run - 1):
+            d.add_edge(groups[i][j], groups[i + 1][j])
+    for j in range(min(n_outputs, fanout)):
+        vo = d.add_op(OpKind.VOUT, f"out{j}")
+        d.add_edge(groups[-1][j], vo)
+    return d
+
+
 FAMILIES: dict[str, Callable[..., DFG]] = {
     "loop": make_loop_kernel,
     "stencil": make_stencil,
     "reduction": make_reduction,
     "cnkm": make_cnkm,
+    "tight": make_tightly_coupled,
 }
 
 

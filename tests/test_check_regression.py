@@ -1,0 +1,67 @@
+"""The bench-regression gate (`benchmarks/check_regression.py`) must
+fail loudly when a whole baseline section vanishes from the fresh JSON
+(a benchmark that silently stopped running), while retired individual
+rows stay informational."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.check_regression import SECTIONS, check  # noqa: E402
+
+
+def _bench(wall=1.0, sections=("kernel_table",), kernels=("C2K6",)):
+    return {s: [dict(kernel=k, mode="bandmap", wall_s=wall)
+                for k in kernels] for s in sections}
+
+
+def test_clean_pass():
+    assert check(_bench(), _bench()) == []
+
+
+def test_regression_fails():
+    failures = check(_bench(wall=1.0), _bench(wall=9.0))
+    assert failures and "exceeds" in failures[0]
+
+
+def test_missing_row_is_note_not_failure():
+    base = _bench(kernels=("C2K6", "C5K5"))
+    fresh = _bench(kernels=("C2K6",))
+    assert check(base, fresh) == []
+
+
+def test_new_section_in_fresh_is_fine():
+    base = _bench(sections=("kernel_table",))
+    fresh = _bench(sections=("kernel_table", "group_move"))
+    assert check(base, fresh) == []
+
+
+def test_missing_section_fails_loudly():
+    base = _bench(sections=("kernel_table", "group_move"))
+    fresh = _bench(sections=("kernel_table",))
+    failures = check(base, fresh)
+    assert len(failures) == 1
+    assert "group_move" in failures[0] and "missing" in failures[0]
+
+
+def test_empty_section_counts_as_missing():
+    base = _bench(sections=("comap",))
+    fresh = dict(_bench(sections=("comap",)), comap=[])
+    failures = check(base, fresh)
+    assert len(failures) == 1 and "comap" in failures[0]
+
+
+def test_machine_speed_scaling_loosens_budget():
+    base = _bench(wall=1.0)
+    base["engine_speedup"] = dict(seed_solve_s=1.0)
+    fresh = _bench(wall=3.0)
+    fresh["engine_speedup"] = dict(seed_solve_s=2.0)   # machine 2x slower
+    assert check(base, fresh) == []                    # 3.0 < 2 * 2 * 1.0
+
+
+def test_group_move_section_is_gated():
+    assert "group_move" in SECTIONS
+    base = _bench(sections=("group_move",))
+    fresh = _bench(sections=("group_move",), wall=9.0)
+    assert check(base, fresh)

@@ -67,6 +67,29 @@ def test_reduction_shape():
     assert len(d.v_r) == 8 + 7             # leaves + tree
 
 
+def test_tightly_coupled_shape_and_invariants():
+    d = generate("tight", n_vios=8, fanout=8, cross_links=2,
+                 link_run=6, seed=0)
+    assert len(d.v_i) == 8 and len(d.v_r) == 64 and len(d.v_o) == 2
+    vins = set(d.v_i)
+    for c in d.v_r:                        # <= 1 VIO pred per op
+        assert sum(1 for p in d.predecessors(c) if p in vins) <= 1
+    for v in d.v_i:                        # high fan-out groups
+        assert d.rd(v) == 8
+    prods = [d.predecessors(v)[0] for v in d.v_o]
+    assert len(prods) == len(set(prods))   # distinct VOO producers
+    # cross-lane runs: exactly cross_links * (link_run - 1) chain edges
+    chain = [e for e in d.edges
+             if e.src in set(d.v_r) and e.dst in set(d.v_r)]
+    assert len(chain) == 2 * 5
+    d.topo_order()                         # acyclic
+    # deterministic in seed
+    d2 = generate("tight", n_vios=8, fanout=8, cross_links=2,
+                  link_run=6, seed=0)
+    assert [(e.src, e.dst) for e in d.edges] == \
+        [(e.src, e.dst) for e in d2.edges]
+
+
 # ----------------------------------------------- loop-carried end-to-end
 @pytest.mark.parametrize("seed", range(3))
 def test_map_loop_kernel_end_to_end(seed):
