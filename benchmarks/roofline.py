@@ -1,8 +1,13 @@
 """Roofline aggregation: read artifacts/dryrun/*.json (written by
 launch/dryrun.py) and print/write the §Roofline table — per (arch × shape
 × mesh): three roofline terms in seconds, dominant bottleneck,
-MODEL_FLOPS/HLO_FLOPs, and the roofline fraction
-(compute_term / max(all terms) — the score §Perf drives up).
+MODEL_FLOPS/HLO_FLOPs, the roofline fraction
+(compute_term / max(all terms) — the score §Perf drives up), and the
+transfer-plan **bandwidth-round depth** (`schedule_transfer_rounds`):
+how many serialized rounds the cell's per-step collectives need when
+same-axis transfers cannot overlap.  A collective-bound cell with round
+depth > 1 is one whose collective term the planner could shrink by
+overlapping rounds across axes.
 
   PYTHONPATH=src python -m benchmarks.roofline [--mesh single|multi|both]
 """
@@ -34,19 +39,45 @@ def load_records(mesh: str = "both", include_opt: bool = True):
     return recs
 
 
+def transfer_round_depth(arch: str, shape: str, mesh: str,
+                         optimized: bool = False) -> int | None:
+    """Bandwidth-round depth of a cell's transfer plan, or None when the
+    cell cannot be planned (unknown arch/shape/mesh).  Mesh axes come
+    from `launch.mesh.PRODUCTION_MESH_AXES` — the dict the dryrun
+    records' meshes were actually built from."""
+    try:
+        from repro.configs import SHAPES, get_config
+        from repro.core.planner import plan, schedule_transfer_rounds
+        from repro.launch.mesh import PRODUCTION_MESH_AXES, mesh_stub
+        axes = PRODUCTION_MESH_AXES.get(mesh)
+        cfg = get_config(arch)
+        cell = SHAPES[shape]
+    except (ImportError, KeyError, ModuleNotFoundError):
+        return None
+    if axes is None:
+        return None
+    p = plan(cfg, cell.kind, cell.seq_len, cell.global_batch,
+             mesh_stub(axes), optimized=optimized, arch=arch,
+             shape=shape)
+    return len(schedule_transfer_rounds(p))
+
+
 def fmt_row(r) -> list:
     if r.get("skipped"):
         return [r["arch"], r["shape"], r["mesh"], "SKIP", "", "", "", "",
-                "", r["reason"][:40]]
+                "", "", r["reason"][:40]]
     ro = r["roofline"]
     frac = ro["compute_s"] / max(ro["compute_s"], ro["memory_s"],
                                  ro["collective_s"])
+    depth = transfer_round_depth(r["arch"], r["shape"], r["mesh"],
+                                 bool(r.get("optimized")))
     return [r["arch"], r["shape"], r["mesh"],
             ("opt" if r.get("optimized") else "base"),
             f"{ro['compute_s']:.4f}", f"{ro['memory_s']:.4f}",
             f"{ro['collective_s']:.4f}",
             ro["dominant"].replace("_s", ""),
-            f"{ro['useful_flops_ratio']:.2f}", f"{frac:.3f}"]
+            f"{ro['useful_flops_ratio']:.2f}", f"{frac:.3f}",
+            "" if depth is None else depth]
 
 
 def main():
@@ -57,7 +88,7 @@ def main():
     recs = load_records(args.mesh)
     header = ["arch", "shape", "mesh", "plan", "compute_s", "memory_s",
               "collective_s", "dominant", "useful_ratio",
-              "roofline_fraction"]
+              "roofline_fraction", "xfer_rounds"]
     rows = [fmt_row(r) for r in recs]
     widths = [max(len(str(x)) for x in [h] + [row[i] for row in rows])
               for i, h in enumerate(header)]

@@ -239,6 +239,15 @@ def bench_mis_engine(quick: bool = False):
             last = sorted(cov, key=int)[-1]
             rows.append([f"group_move_{row['kernel']}_{row['mode']}_"
                          f"coverage@{last}", f"{cov[last]}/{row['n_ops']}"])
+    for row in bench["serve"]:
+        rows.append([f"serve_{row['kernel']}_{row['mode']}_rps",
+                     row["rps"]])
+        if "hit_rate" in row:
+            rows.append([f"serve_{row['kernel']}_{row['mode']}_hit_rate",
+                         row["hit_rate"]])
+        if "speedup" in row:
+            rows.append([f"serve_{row['kernel']}_{row['mode']}_speedup",
+                         row["speedup"]])
     return _emit("mis_engine", ["name", "value"], rows)
 
 

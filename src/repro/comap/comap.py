@@ -47,6 +47,9 @@ class CoMapResult:
     ok: bool
     ii: int                          # common II (-1 when nothing mapped)
     regions: list[Region]
+    # Region-view configs the per-kernel runs were mapped against
+    # (region rows/cols + the GRF share granted to each region).
+    region_cfgs: list[CGRAConfig]
     results: list[MappingResult | None]   # per-kernel region mappings
     sched: ScheduledDFG | None       # merged schedule (ok runs)
     placement: dict[int, Vertex]     # merged global placement
@@ -69,16 +72,19 @@ class CoMapResult:
 
 
 def co_map(dfgs: list[DFG], cgra: CGRAConfig, *, mode: str = "bandmap",
-           max_ii: int = 32, seed: int = 0, rounds: int = 4,
-           grf_split: bool = True, **map_kw) -> CoMapResult:
+           max_ii: int = 32, min_ii: int | None = None, seed: int = 0,
+           rounds: int = 4, grf_split: bool = True,
+           **map_kw) -> CoMapResult:
     """Co-map ``dfgs`` onto ``cgra``; see the module docstring.
 
     ``rounds`` bounds the arbitration/validation retries per II before
-    escalating.  ``grf_split`` divides the global register file evenly
-    among regions for the local runs (the pooled budget is re-checked by
-    the arbiter and the merged replay either way).  Remaining keyword
-    arguments are forwarded to every `map_dfg` call (mis_restarts,
-    certify, row_cache_limit, ...)."""
+    escalating.  ``min_ii`` floors the common-II search (a caller
+    pacing the kernels to an external rate passes the same floor it
+    would pass to `map_dfg`).  ``grf_split`` divides the global
+    register file evenly among regions for the local runs (the pooled
+    budget is re-checked by the arbiter and the merged replay either
+    way).  Remaining keyword arguments are forwarded to every
+    `map_dfg` call (mis_restarts, certify, row_cache_limit, ...)."""
     t0 = _time.perf_counter()
     k = len(dfgs)
     if k == 0:
@@ -86,7 +92,8 @@ def co_map(dfgs: list[DFG], cgra: CGRAConfig, *, mode: str = "bandmap",
     regions = partition(cgra, [op_weight(d) for d in dfgs])
     grf_share = (cgra.grf // k) if grf_split else cgra.grf
     cfgs = [reg.config(cgra, grf=grf_share) for reg in regions]
-    start_ii = max(mii(d, cfg) for d, cfg in zip(dfgs, cfgs))
+    start_ii = max(min_ii or 0,
+                   max(mii(d, cfg) for d, cfg in zip(dfgs, cfgs)))
 
     results: list[MappingResult | None] = [None] * k
     attempts = 0
@@ -120,9 +127,9 @@ def co_map(dfgs: list[DFG], cgra: CGRAConfig, *, mode: str = "bandmap",
             if report.ok:
                 return CoMapResult(
                     ok=True, ii=ii_star, regions=regions,
-                    results=results, sched=merged_sched,
-                    placement=placement, report=report, arbiter=arb,
-                    attempts=attempts,
+                    region_cfgs=cfgs, results=results,
+                    sched=merged_sched, placement=placement,
+                    report=report, arbiter=arb, attempts=attempts,
                     wall_s=_time.perf_counter() - t0)
             # Merged validation failed on capacity the fixed claims
             # could not see (global bus packing): re-map the regions the
@@ -133,6 +140,7 @@ def co_map(dfgs: list[DFG], cgra: CGRAConfig, *, mode: str = "bandmap",
     return CoMapResult(
         ok=False,
         ii=next((r.ii for r in results if r is not None), -1),
-        regions=regions, results=results, sched=merged_sched,
-        placement=placement, report=last_report, arbiter=last_arb,
-        attempts=attempts, wall_s=_time.perf_counter() - t0)
+        regions=regions, region_cfgs=cfgs, results=results,
+        sched=merged_sched, placement=placement, report=last_report,
+        arbiter=last_arb, attempts=attempts,
+        wall_s=_time.perf_counter() - t0)

@@ -13,10 +13,11 @@ from .mis import (GroupMoveConfig, greedy_mis, solve_mis,
                   solve_mis_portfolio)
 from .schedule import ScheduledDFG, mii, res_mii, schedule_dfg
 from .tec import TEC
-from .workloads import (COMAP_16X16_SPECS, WorkloadSpec, generate,
-                        make_loop_kernel, make_reduction, make_stencil,
-                        make_tightly_coupled, scale_16x16_loop,
-                        sweep_specs)
+from .workloads import (COMAP_16X16_SPECS, TraceRequest, WorkloadSpec,
+                        generate, make_loop_kernel, make_reduction,
+                        make_request_trace, make_stencil,
+                        make_tightly_coupled, permute_dfg,
+                        scale_16x16_loop, serve_catalog, sweep_specs)
 
 __all__ = [
     "MappingResult", "compare_modes", "map_dfg", "BitsetGraph",
@@ -25,7 +26,8 @@ __all__ = [
     "PAPER_KERNELS", "all_paper_kernels", "cnkm_name", "make_cnkm",
     "GroupMoveConfig", "greedy_mis", "solve_mis", "solve_mis_portfolio",
     "ScheduledDFG", "mii", "res_mii", "schedule_dfg", "TEC",
-    "COMAP_16X16_SPECS", "WorkloadSpec", "generate", "make_loop_kernel",
-    "make_reduction", "make_stencil", "make_tightly_coupled",
-    "scale_16x16_loop", "sweep_specs",
+    "COMAP_16X16_SPECS", "TraceRequest", "WorkloadSpec", "generate",
+    "make_loop_kernel", "make_reduction", "make_request_trace",
+    "make_stencil", "make_tightly_coupled", "permute_dfg",
+    "scale_16x16_loop", "serve_catalog", "sweep_specs",
 ]

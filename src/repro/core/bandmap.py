@@ -51,6 +51,29 @@ class MappingResult:
         """MII / II — the paper's throughput metric (1.0 = best)."""
         return self.mii / self.ii if self.ii else 0.0
 
+    # ------------------------------------------------- serialization
+    # Everything a MappingResult holds (ScheduledDFG, Vertex placement,
+    # ValidationReport, IICertificate) is plain dataclasses + numpy, so
+    # pickle round-trips it exactly; the version tag guards the serving
+    # cache's on-disk artifacts (`serve.cache`) against silently loading
+    # results written by an incompatible result layout.
+    SERIAL_VERSION = 1
+
+    def to_bytes(self) -> bytes:
+        import pickle
+        return pickle.dumps((MappingResult.SERIAL_VERSION, self),
+                            protocol=pickle.HIGHEST_PROTOCOL)
+
+    @staticmethod
+    def from_bytes(data: bytes) -> "MappingResult":
+        import pickle
+        version, res = pickle.loads(data)
+        if version != MappingResult.SERIAL_VERSION:
+            raise ValueError(
+                f"MappingResult serial version {version} != "
+                f"{MappingResult.SERIAL_VERSION}")
+        return res
+
     def summary(self) -> str:
         return (f"{self.mode}: II={self.ii} (MII={self.mii}, "
                 f"ratio={self.ii_ratio:.2f}), routingPEs={self.n_routing_pes}, "

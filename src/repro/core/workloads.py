@@ -303,6 +303,104 @@ def op_weight(d: DFG) -> int:
     return max(len(d.v_r), 1)
 
 
+# ----------------------------------------------------------- serving trace
+def permute_dfg(d: DFG, *, seed: int = 0) -> DFG:
+    """Random vertex relabeling of ``d``: the same mapping problem under
+    a shuffled op-id assignment (and shuffled op/edge iteration order).
+
+    This is what a client resubmitting a structurally-identical kernel
+    looks like to the serving layer — the canonicalizer (`serve.canon`)
+    must hash both labelings identically, and a cached placement must
+    replay onto the permuted ids."""
+    rng = np.random.default_rng(seed)
+    ids = sorted(d.ops)
+    shuffled = [ids[i] for i in rng.permutation(len(ids))]
+    mapping = dict(zip(ids, shuffled))
+    out = DFG()
+    for oid in [ids[i] for i in rng.permutation(len(ids))]:
+        op = d.ops[oid]
+        nid = mapping[oid]
+        out.ops[nid] = dataclasses.replace(
+            op, op_id=nid,
+            clone_of=mapping[op.clone_of] if op.clone_of >= 0 else -1)
+    edges = [dataclasses.replace(e, src=mapping[e.src],
+                                 dst=mapping[e.dst]) for e in d.edges]
+    out.edges = [edges[i] for i in rng.permutation(len(edges))]
+    out._next_id = max(out.ops, default=-1) + 1
+    return out
+
+
+def serve_catalog(scale: str = "8x8", *, seed: int = 0
+                  ) -> list[WorkloadSpec]:
+    """The distinct-kernel population a request trace draws from.
+
+    Sized so each kernel maps in tens of milliseconds at its scale's
+    fabric (the regime where a cache hit — canonicalize + relabel +
+    validator replay, ~1 ms — is decisively cheaper than a fresh map),
+    with enough variety that a Zipf tail still forces real misses."""
+    mult = {"4x4": 1, "8x8": 2, "16x16": 4}[scale]
+    specs = [
+        WorkloadSpec("c2k4", "cnkm", dict(n=2, m=4)),
+        WorkloadSpec("c2k6", "cnkm", dict(n=2, m=6)),
+        WorkloadSpec("c3k6", "cnkm", dict(n=3, m=6)),
+        WorkloadSpec("c4k4", "cnkm", dict(n=4, m=4)),
+        WorkloadSpec("c4k8", "cnkm", dict(n=4, m=8)),
+        WorkloadSpec("c5k5", "cnkm", dict(n=5, m=5)),
+        WorkloadSpec("stencil4", "stencil", dict(points=4, taps=3)),
+        WorkloadSpec(f"stencil{3 * mult}",
+                     "stencil", dict(points=3 * mult, taps=3)),
+        WorkloadSpec(f"reduce{8 * mult}",
+                     "reduction", dict(width=8 * mult, arity=2)),
+        WorkloadSpec("reduce6a3", "reduction", dict(width=6, arity=3)),
+    ]
+    for k in range(3):
+        specs.append(WorkloadSpec(
+            f"loop{mult}x{k}", "loop",
+            dict(n_chains=2 * mult, chain_len=4,
+                 n_inputs=min(2 + mult, 4), n_outputs=2,
+                 n_carries=min(k, 2 * mult), max_distance=2,
+                 seed=seed + k)))
+    return specs
+
+
+@dataclasses.dataclass
+class TraceRequest:
+    """One entry of a serving request trace."""
+    name: str            # catalog spec the kernel was drawn from
+    dfg: DFG             # freshly built (and usually permuted) instance
+    deadline: float      # admission order hint (arrival index here)
+    tenant: str | None = None
+
+
+def make_request_trace(n_requests: int = 200, *, scale: str = "8x8",
+                       zipf_s: float = 1.1, permute: bool = True,
+                       seed: int = 0,
+                       catalog: list[WorkloadSpec] | None = None
+                       ) -> list[TraceRequest]:
+    """Zipf-popularity request trace over the serving catalog.
+
+    Kernel ``k`` (0-based catalog rank) is drawn with probability
+    proportional to ``1 / (k+1)**zipf_s`` — the classic popularity skew
+    under which a mapping cache earns its keep: a few hot kernels
+    dominate the trace while the tail keeps producing compulsory
+    misses.  With ``permute`` each instance carries a fresh random
+    vertex relabeling, so hits are only reachable through canonical
+    (isomorphism-invariant) hashing, never through accidental id
+    equality.  Deterministic in ``seed``."""
+    specs = catalog if catalog is not None else serve_catalog(scale)
+    rng = np.random.default_rng(seed)
+    p = np.arange(1, len(specs) + 1, dtype=float) ** -zipf_s
+    p /= p.sum()
+    draws = rng.choice(len(specs), size=n_requests, p=p)
+    trace = []
+    for t, k in enumerate(draws):
+        d = specs[k].build()
+        if permute:
+            d = permute_dfg(d, seed=int(rng.integers(1 << 31)))
+        trace.append(TraceRequest(specs[k].name, d, deadline=float(t)))
+    return trace
+
+
 # The canonical 16x16 co-mapping scenario: two loop kernels with
 # loop-carried accumulators (RecMII 4 and 3) plus a 6-point stencil.
 # Single source of truth for benchmarks/bench_mis.py (comap section),

@@ -23,10 +23,29 @@ def _mk(shape, axes):
                          axis_types=(AxisType.Auto,) * len(axes))
 
 
+# Axis name -> size per mesh flavour.  Single source of truth for the
+# production shapes: `make_production_mesh` builds the jax mesh from it
+# (device state is only touched there), and planner-side consumers that
+# must not instantiate a mesh (benchmarks/roofline.py's transfer-round
+# column) read the same dict instead of hardcoding a copy.
+PRODUCTION_MESH_AXES: dict[str, dict[str, int]] = {
+    "single": {"data": 16, "model": 16},
+    "multi": {"pod": 2, "data": 16, "model": 16},
+}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return _mk(shape, axes)
+    axes = PRODUCTION_MESH_AXES["multi" if multi_pod else "single"]
+    return _mk(tuple(axes.values()), tuple(axes))
+
+
+def mesh_stub(axes: dict):
+    """Planner-facing mesh stand-in: `core.planner.plan` only reads
+    ``mesh.shape``, so consumers that must not instantiate a jax mesh
+    (roofline's transfer-round column, the serving driver's plan
+    report) pass this instead."""
+    import types
+    return types.SimpleNamespace(shape=dict(axes))
 
 
 def make_smoke_mesh():

@@ -11,7 +11,16 @@ cells lower.)
 The BandMap framing: model weights are the highest-RD data at serving
 time (reused by every request every step), so throughput is
 weight-bandwidth-bound until the batch is large — the planner's multicast
-allocation (TP-resident shards) is what amortises them.
+allocation (TP-resident shards) is what amortises them.  Before serving,
+the driver prints the plan's **bandwidth rounds**
+(`planner.schedule_transfer_rounds`): which per-step collectives can
+overlap and which contend for the same mesh axis — the serialization
+depth of the serving step.
+
+The CGRA mapping analogue of this loop lives behind ``--map-trace N``:
+instead of LLM requests, serve ``N`` kernel-mapping requests through the
+`repro.serve.MappingService` (canonical-hash cache + batched scheduler
+over the portfolio engine) and report hit-rate and latency percentiles.
 """
 
 from __future__ import annotations
@@ -65,6 +74,58 @@ class WaveServer:
         return np.stack(out, axis=1)[:b]
 
 
+def serving_transfer_rounds(cfg, *, batch: int, seq: int,
+                            tp: int = 16) -> tuple[list[list[str]], str]:
+    """Bandwidth rounds of the decode step's transfer plan.
+
+    Builds the planner's transfer DFG for a TP-sharded decode step and
+    peels it into contention-free rounds with
+    `planner.schedule_transfer_rounds` — the ROADMAP's bridge from the
+    CGRA binder to mesh collective scheduling, wired into the serving
+    driver.  Returns (rounds, printable summary)."""
+    from repro.core import planner
+    from repro.launch.mesh import mesh_stub
+
+    plan = planner.plan(cfg, "decode", seq, batch,
+                        mesh_stub({"data": 1, "model": tp}),
+                        arch=cfg.name, shape="serve")
+    rounds = planner.schedule_transfer_rounds(plan)
+    moving = [t for t in plan.transfers if t.bytes_per_step > 0]
+    text = (f"transfer plan: {len(plan.transfers)} classes, "
+            f"{len(moving)} moving bytes -> {len(rounds)} bandwidth "
+            f"round(s) {rounds}")
+    return rounds, text
+
+
+def run_map_trace(n_requests: int = 64, *, scale: str = "8x8",
+                  rows: int = 8, cols: int = 8, seed: int = 0,
+                  max_workers: int | None = None,
+                  art_dir: str | None = None,
+                  quiet: bool = False) -> dict:
+    """Serve a Zipf kernel-mapping trace through `MappingService`.
+
+    This is the mapping-as-a-service loop: canonical-hash cache in
+    front of the portfolio engine, batched admission, per-request
+    metrics.  Returns the service metrics dict."""
+    from repro.core.cgra import CGRAConfig
+    from repro.core.workloads import make_request_trace
+    from repro.serve import MappingService, MapRequest
+
+    trace = make_request_trace(n_requests, scale=scale, seed=seed)
+    cgra = CGRAConfig(rows=rows, cols=cols)
+    svc = MappingService(max_workers=max_workers, art_dir=art_dir,
+                         base_seed=seed)
+    svc.map_batch([MapRequest(dfg=t.dfg, cgra=cgra, deadline=t.deadline,
+                              tenant=t.tenant, req_id=f"r{i}")
+                   for i, t in enumerate(trace)])
+    metrics = svc.metrics()
+    if not quiet:
+        print(svc.summary())
+        print(f"  sources: {metrics['sources']}")
+        print(f"  cache:   {metrics['cache']}")
+    return metrics
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-4b")
@@ -73,10 +134,27 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--map-trace", type=int, default=0, metavar="N",
+                    help="serve N kernel-mapping requests through "
+                         "MappingService instead of LLM requests")
+    ap.add_argument("--trace-scale", default="8x8",
+                    choices=["4x4", "8x8", "16x16"])
     args = ap.parse_args(argv)
+
+    if args.map_trace:
+        from repro.serve import DEFAULT_ART_DIR
+        rows = cols = int(args.trace_scale.split("x")[0])
+        # Persistent artifact store: a second invocation hits the disk
+        # tier for every kernel this one mapped.
+        return run_map_trace(args.map_trace, scale=args.trace_scale,
+                             rows=rows, cols=cols,
+                             art_dir=DEFAULT_ART_DIR)
 
     cfg = get_smoke_config(args.arch) if args.smoke \
         else get_config(args.arch)
+    _, rounds_text = serving_transfer_rounds(
+        cfg, batch=args.slots, seq=args.prompt_len + args.gen)
+    print(rounds_text)
     params = M.init_params(cfg, 0)
     server = WaveServer(cfg, params, slots=args.slots,
                         s_max=args.prompt_len + args.gen + 8)

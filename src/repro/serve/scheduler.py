@@ -1,0 +1,348 @@
+"""Admission + batching of concurrent mapping requests.
+
+A batch of `MapRequest`s is served in four stages:
+
+1. **Admission** — requests are ordered by (deadline, arrival): the
+   earliest deadline is looked up, deduped and dispatched first, so
+   under a loaded worker pool tight-deadline requests start earliest.
+2. **Cache** — each request's canonical form is looked up in the
+   `MappingCache`; hits (positive, validator-replayed, or soundly
+   negative) resolve immediately.  Tenant-tagged requests skip the
+   cache and dedupe: co-residency asks for a *joint* placement with
+   the batch's co-tenants, which no cached solo placement satisfies,
+   and two isomorphic kernels of one tenant are distinct co-resident
+   instances, not duplicates.
+3. **Dedupe + grouping** — missing requests with the same cache key
+   collapse onto one *leader* computation (followers resolve from the
+   cache right after the leader lands — each follower still gets its
+   own relabeled, validator-replayed copy).  Requests sharing a
+   non-``None`` ``tenant``, the same fabric and the same options are
+   co-tenants: groups of two or more are batched into one
+   `comap.co_map` region run and placed on the array *together* (each
+   kernel in its own rectangular region at one common II); a tenant
+   alone in its batch is effectively solo, so it is cache-looked-up
+   and mapped like any other request.  Co-mapped region results are
+   not cached (their region shape depends on the whole group; a failed
+   group run falls everyone back to cached solo maps, since
+   region-locally-ok placements of a failed run still clash on shared
+   scopes).
+4. **Dispatch** — remaining independent leaders run `map_dfg` across a
+   thread pool, with per-request seed diversification (two identical
+   budgets don't retrace the same portfolio trajectories).  Workers
+   only run the pure mapper; all cache traffic stays on the calling
+   thread, so the cache needs no locking.
+
+The scheduler is synchronous per batch — `run` returns when every
+request has an outcome — which is what the benchmark loop and the
+`MappingService` facade want; a long-lived server loops over batches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+import time as _time
+from concurrent.futures import ThreadPoolExecutor, as_completed
+
+from repro.core.bandmap import MappingResult, map_dfg
+from repro.core.cgra import CGRAConfig
+from repro.core.dfg import DFG
+from repro.core.validate import validate_mapping
+
+from .cache import MappingCache
+from .canon import (CanonicalForm, canonical_dfg, canonical_form,
+                    relabel_result)
+
+
+@dataclasses.dataclass
+class MapRequest:
+    """One mapping request.  ``options`` is forwarded to `map_dfg`
+    verbatim (mode, budgets, knobs) and participates in the cache key.
+    ``deadline`` orders admission (smaller = sooner; same unit as the
+    caller likes — only the order matters).  Requests sharing a
+    ``tenant`` ask to be co-resident on the fabric and are batched into
+    one co-mapping run."""
+    dfg: DFG
+    cgra: CGRAConfig
+    options: dict = dataclasses.field(default_factory=dict)
+    deadline: float = math.inf
+    tenant: str | None = None
+    seed: int | None = None
+    req_id: str = ""
+
+
+@dataclasses.dataclass
+class ServeOutcome:
+    req_id: str
+    result: MappingResult
+    hit: bool
+    source: str          # memory | disk | negative-* | dedupe | computed | comap
+    # Serve-side latency: batch admission -> this request resolved,
+    # queue wait included (NOT just the mapper's internal wall time).
+    wall_s: float
+    canon_digest: str
+
+    @property
+    def ok(self) -> bool:
+        return self.result.ok
+
+
+class RequestScheduler:
+    """See module docstring."""
+
+    def __init__(self, cache: MappingCache, *,
+                 max_workers: int | None = None,
+                 base_seed: int = 0) -> None:
+        self.cache = cache
+        # The mapper is GIL-heavy python+numpy: oversubscribing cores
+        # slows every in-flight map and inflates tail latency, so the
+        # default pool matches the machine.
+        self.max_workers = max_workers if max_workers is not None \
+            else max(1, min(os.cpu_count() or 1, 8))
+        self.base_seed = base_seed
+
+    # ------------------------------------------------------------- run
+    def run(self, requests: list[MapRequest]) -> list[ServeOutcome]:
+        n = len(requests)
+        canons: list[CanonicalForm] = [None] * n
+        effs: list[dict] = [None] * n
+        outcomes: list[ServeOutcome | None] = [None] * n
+        order = sorted(range(n),
+                       key=lambda i: (requests[i].deadline, i))
+        # Serve-side latency = batch admission -> this request resolved
+        # (queue wait included — a fast map behind a long queue is a
+        # slow request).
+        t_batch = _time.perf_counter()
+
+        def resolve(i: int, result, *, hit: bool, source: str) -> None:
+            outcomes[i] = ServeOutcome(
+                requests[i].req_id, result, hit=hit, source=source,
+                wall_s=_time.perf_counter() - t_batch,
+                canon_digest=canons[i].digest)
+
+        def resolve_hit(i: int, cache_hit, *, dedupe: bool) -> None:
+            src = "dedupe" if dedupe else cache_hit.source
+            if cache_hit.negative:
+                src = f"negative-{src}"
+            resolve(i, cache_hit.result, hit=True, source=src)
+
+        # Stage 2: cache lookups in admission order.  Tenant-tagged
+        # requests skip the cache *and* dedupe here: co-residency asks
+        # for a joint placement with the batch's co-tenants — a cached
+        # solo full-array placement would overlap theirs, and two
+        # isomorphic kernels of one tenant are distinct co-resident
+        # instances, not duplicates.  (A tenant that turns out to be
+        # alone in the batch is looked up in stage 3b instead.)
+        pending: list[int] = []
+        for i in order:
+            canons[i] = canonical_form(requests[i].dfg)
+            # Effective options — the seed resolved (pinned or digest-
+            # derived) — are what the mapper will actually run under,
+            # so they are also what the cache must key on: a negative
+            # entry proven under seed 7 must never answer a request
+            # that would have run under another seed.
+            effs[i] = self._solo_options(requests[i], canons[i])
+            if requests[i].tenant is not None:
+                pending.append(i)
+                continue
+            hit = self.cache.lookup(canons[i], requests[i].cgra,
+                                    effs[i])
+            if hit is not None:
+                resolve_hit(i, hit, dedupe=False)
+            else:
+                pending.append(i)
+
+        # Stage 3a: in-flight dedupe by cache key (leader = earliest
+        # deadline, since ``pending`` is in admission order) — distinct
+        # pinned seeds mean distinct keys, so they never collapse.
+        # Tenant requests are not deduped (see above) — they route
+        # straight to the co-tenant buckets (grouped by raw options:
+        # co-residency should not split on seed).
+        by_key: dict[str, list[int]] = {}
+        by_tenant: dict[tuple, list[int]] = {}
+        for i in pending:
+            r = requests[i]
+            if r.tenant is not None:
+                # Canonical digest excluded: co-tenancy is about
+                # sharing the fabric, not about being isomorphic.  The
+                # seed is excluded too — `_co_run` runs the group under
+                # one seed anyway, and a pinned seed must not split a
+                # tenant's kernels into overlapping solo placements.
+                tkey = (r.tenant, self.cache.key(
+                    _FABRIC_ONLY, r.cgra,
+                    {k: v for k, v in r.options.items() if k != "seed"}))
+                by_tenant.setdefault(tkey, []).append(i)
+                continue
+            key = self.cache.key(canons[i], r.cgra, effs[i])
+            by_key.setdefault(key, []).append(i)
+        leaders = [idxs[0] for idxs in by_key.values()]
+        followers = {idxs[0]: idxs[1:] for idxs in by_key.values()}
+
+        # Stage 3b: co-tenant groups of >= 2 become `co_map` runs.  A
+        # tenant alone in its batch has nothing to be co-resident with,
+        # so it is effectively solo — which also makes a cached solo
+        # placement sound to reuse; look it up now (stage 2 skipped it).
+        co_groups: list[list[int]] = []
+        solo: list[int] = list(leaders)
+        for idxs in by_tenant.values():
+            if len(idxs) >= 2:
+                co_groups.append(idxs)
+                continue
+            i = idxs[0]
+            hit = self.cache.lookup(canons[i], requests[i].cgra,
+                                    effs[i])
+            if hit is not None:
+                resolve_hit(i, hit, dedupe=False)
+            else:
+                solo.append(i)
+        solo.sort(key=lambda i: (requests[i].deadline, i))
+
+        # Stage 4: dispatch.  Futures are submitted in deadline order
+        # and collected as they complete, so a request never waits on
+        # unrelated work: each dedupe follower resolves (replay of the
+        # leader's entry — relabeled onto its own DFG and validator-
+        # replayed) the moment its leader lands, not when the whole
+        # pool drains.  When the leader's result was uncacheable
+        # (heuristic failure) or rejected on replay, followers share
+        # the leader's in-hand result directly — identical key means
+        # identical canonical input and options, so a rerun would
+        # reproduce it bit-for-bit.
+        with ThreadPoolExecutor(max_workers=self.max_workers) as pool:
+            def submit_solo(i: int):
+                # Map the *canonical* copy: bit-identical input and a
+                # digest-derived seed make the whole run a function of
+                # structure + options — see `canon.canonical_dfg`.
+                return pool.submit(
+                    map_dfg, canonical_dfg(requests[i].dfg, canons[i]),
+                    requests[i].cgra, **effs[i])
+
+            futs = {submit_solo(i): ("solo", i) for i in solo}
+            futs.update(
+                (pool.submit(self._co_run, requests, idxs),
+                 ("comap", idxs)) for idxs in co_groups)
+            fallback_futs: dict[object, int] = {}
+
+            def resolve_computed(i: int, res) -> None:
+                """``res`` is canonically-labeled: store as-is, then
+                relabel onto the request's own ids (re-validated, so
+                the released binding is validator-accepted under the
+                ids the caller sees)."""
+                self.cache.store(canons[i], requests[i].cgra,
+                                 effs[i], res, canonical=True)
+                inv = {ci: oid
+                       for oid, ci in canons[i].canon_of.items()}
+                out = relabel_result(res, inv)
+                if out.ok and out.sched is not None:
+                    out = dataclasses.replace(out, report=validate_mapping(
+                        out.sched, requests[i].cgra, out.placement))
+                resolve(i, out, hit=False, source="computed")
+                for j in followers.pop(i, ()):
+                    hit = self.cache.lookup(canons[j], requests[j].cgra,
+                                            effs[j])
+                    if hit is not None:
+                        resolve_hit(j, hit, dedupe=True)
+                        continue
+                    # Leader's entry was uncacheable (heuristic
+                    # failure) or rejected on replay.  The follower
+                    # shares the leader's key — identical canonical
+                    # input and effective options — so a rerun would
+                    # reproduce ``res`` bit-for-bit; share the in-hand
+                    # result instead of burning another full map.
+                    inv_j = {ci: oid
+                             for oid, ci in canons[j].canon_of.items()}
+                    out_j = relabel_result(res, inv_j)
+                    if out_j.ok and out_j.sched is not None:
+                        out_j = dataclasses.replace(
+                            out_j, report=validate_mapping(
+                                out_j.sched, requests[j].cgra,
+                                out_j.placement))
+                    resolve(j, out_j, hit=False, source="dedupe")
+
+            for fut in as_completed(list(futs)):
+                tag, payload = futs[fut]
+                if tag == "solo":
+                    resolve_computed(payload, fut.result())
+                    continue
+                for i, res in fut.result():
+                    if res is not None:
+                        # Successful region results are NOT cached:
+                        # they bind a region view whose shape depends
+                        # on the whole group, and no lookup path
+                        # carries a region config — a repeated group
+                        # re-runs `co_map`.
+                        resolve(i, res, hit=False, source="comap")
+                    else:
+                        # Unplaced kernel: its fallback solo map goes
+                        # through the pool like any other computation.
+                        fallback_futs[submit_solo(i)] = i
+            for fut in as_completed(list(fallback_futs)):
+                resolve_computed(fallback_futs[fut], fut.result())
+        return outcomes
+
+    # --------------------------------------------------------- helpers
+    def _solo_options(self, req: MapRequest,
+                      canon: CanonicalForm) -> dict:
+        """Per-request seed diversification: a pinned seed (in options
+        or on the request) wins; otherwise the seed derives from the
+        canonical digest — distinct problems explore distinct portfolio
+        trajectories, while isomorphic requests reproduce the same run
+        (which is what lets their results be shared soundly)."""
+        opts = dict(req.options)
+        if "seed" not in opts:
+            opts["seed"] = req.seed if req.seed is not None else \
+                (self.base_seed + int(canon.digest[:8], 16)) % (1 << 31)
+        return opts
+
+    def _co_run(self, requests: list[MapRequest], idxs: list[int]
+                ) -> list[tuple[int, MappingResult | None]]:
+        """One co-tenant group -> one `co_map` region run.  Returns
+        (request idx, result-or-None) pairs: a result binds the
+        kernel's *region view* (`CoMapResult.region_cfgs`) in global
+        fabric coordinates; ``None`` means the kernel was not jointly
+        placed and the caller submits its fallback solo map through the
+        pool (workers here only run the co-mapper itself)."""
+        from repro.comap import co_map
+
+        lead = requests[idxs[0]]
+        cgra = lead.cgra
+        opts = dict(lead.options)
+        mode = opts.pop("mode", "bandmap")
+        max_ii = opts.pop("max_ii", 32)
+        min_ii = opts.pop("min_ii", None)
+        # Same precedence as solo requests: options seed, then the
+        # request-level pinned seed, then the scheduler default.
+        seed = opts.pop("seed", lead.seed if lead.seed is not None
+                        else self.base_seed)
+        cm = co_map([requests[i].dfg for i in idxs], cgra, mode=mode,
+                    max_ii=max_ii, min_ii=min_ii, seed=seed, **opts)
+        out: list[tuple[int, MappingResult | None]] = []
+        for j, i in enumerate(idxs):
+            # A region result is only a *joint* placement when the whole
+            # co-map succeeded (arbitration + merged validator replay);
+            # after a failed run, region-locally-ok results still clash
+            # on shared scopes, so every kernel falls back.
+            res = cm.results[j] if cm.ok else None
+            if res is None or not res.ok:
+                out.append((i, None))
+            else:
+                # Region runs place in region-local coordinates;
+                # translate to the shared fabric so co-resident
+                # outcomes are directly comparable (disjoint PEs,
+                # global ports).
+                out.append((i, dataclasses.replace(res, placement={
+                    oid: cm.regions[j].translate_vertex(v)
+                    for oid, v in res.placement.items()})))
+        return out
+
+
+class _FabricSentinel:
+    """Stands in for a canonical form in co-tenant group keys (only the
+    fabric + options fingerprints matter there)."""
+    digest = "co-tenant"
+    blob = b""
+    canon_of: dict[int, int] = {}
+    op_of: list[int] = []
+
+
+_FABRIC_ONLY = _FabricSentinel()

@@ -1,0 +1,106 @@
+"""`MappingService` — the mapping-as-a-service facade.
+
+One object owns the canonical-form cache (`serve.cache`) and the
+batching scheduler (`serve.scheduler`) and exposes two calls:
+
+- ``map(dfg, cgra, **options)`` — one request, one outcome;
+- ``map_batch(requests)``       — a wave of `MapRequest`s, outcomes in
+  request order.
+
+Invariant (inherited from the cache, restated here because callers see
+this module): **every positive cache hit is replayed through
+`core.validate.validate_mapping` before it is released** — the service
+never returns a binding the validator has not accepted against the
+requesting DFG's own op ids.  Negative hits short-circuit only when the
+canonical blobs are byte-equal, i.e. when the request is provably
+isomorphic to the DFG the infeasibility was established for.
+
+The service keeps running metrics — per-request latency percentiles,
+hit sources, throughput — which `launch/serve.py`,
+`examples/serve_batch.py` and the ``serve`` benchmark section report.
+"""
+
+from __future__ import annotations
+
+import time as _time
+from collections import Counter
+
+import numpy as np
+
+from repro.core.cgra import CGRAConfig
+from repro.core.dfg import DFG
+
+from .cache import MappingCache
+from .scheduler import MapRequest, RequestScheduler, ServeOutcome
+
+DEFAULT_ART_DIR = "artifacts/serve"
+
+
+class MappingService:
+    """See module docstring.  ``art_dir=None`` keeps the cache purely
+    in-memory (benchmarks, tests); pass `DEFAULT_ART_DIR` (or any path)
+    to persist mappings across processes."""
+
+    def __init__(self, *, cache: MappingCache | None = None,
+                 capacity: int = 256, art_dir: str | None = None,
+                 max_workers: int | None = None,
+                 base_seed: int = 0) -> None:
+        self.cache = cache if cache is not None else \
+            MappingCache(capacity=capacity, art_dir=art_dir)
+        self.scheduler = RequestScheduler(self.cache,
+                                          max_workers=max_workers,
+                                          base_seed=base_seed)
+        self._latencies: list[float] = []
+        self._sources: Counter[str] = Counter()
+        self._requests = 0
+        self._hits = 0
+        self._ok = 0
+        self._batch_wall_s = 0.0
+
+    # -------------------------------------------------------------- api
+    def map(self, dfg: DFG, cgra: CGRAConfig, *, deadline: float = 0.0,
+            tenant: str | None = None, req_id: str = "",
+            **options) -> ServeOutcome:
+        return self.map_batch([MapRequest(
+            dfg=dfg, cgra=cgra, options=options, deadline=deadline,
+            tenant=tenant, req_id=req_id)])[0]
+
+    def map_batch(self, requests: list[MapRequest]
+                  ) -> list[ServeOutcome]:
+        t0 = _time.perf_counter()
+        outcomes = self.scheduler.run(requests)
+        self._batch_wall_s += _time.perf_counter() - t0
+        for out in outcomes:
+            self._requests += 1
+            self._hits += int(out.hit)
+            self._ok += int(out.result is not None and out.result.ok)
+            self._sources[out.source] += 1
+            self._latencies.append(out.wall_s)
+        return outcomes
+
+    # ---------------------------------------------------------- metrics
+    def metrics(self) -> dict:
+        lat = np.asarray(self._latencies, dtype=float)
+        p50, p95 = (float(np.percentile(lat, 50)),
+                    float(np.percentile(lat, 95))) if lat.size else (0., 0.)
+        return dict(
+            requests=self._requests,
+            ok=self._ok,
+            hits=self._hits,
+            hit_rate=round(self._hits / self._requests, 4)
+            if self._requests else 0.0,
+            p50_ms=round(p50 * 1e3, 3),
+            p95_ms=round(p95 * 1e3, 3),
+            wall_s=round(self._batch_wall_s, 3),
+            throughput_rps=round(self._requests / self._batch_wall_s, 2)
+            if self._batch_wall_s else 0.0,
+            sources=dict(self._sources),
+            cache=self.cache.stats.as_dict(),
+        )
+
+    def summary(self) -> str:
+        m = self.metrics()
+        return (f"serve: {m['requests']} requests "
+                f"({m['ok']} ok), hit-rate {m['hit_rate']:.0%}, "
+                f"p50 {m['p50_ms']:.1f} ms, p95 {m['p95_ms']:.1f} ms, "
+                f"{m['throughput_rps']:.1f} req/s")

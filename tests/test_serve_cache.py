@@ -1,0 +1,138 @@
+"""Two-tier mapping cache (`repro.serve.cache`): hit tiers, LRU
+eviction, key separation, negative short-circuit, and the
+validator-replay-on-hit invariant."""
+
+import dataclasses
+
+from repro.core import CGRAConfig, make_cnkm, permute_dfg
+from repro.core.bandmap import map_dfg
+from repro.serve import MappingCache, canonical_form
+
+CGRA = CGRAConfig()
+
+# C5K5 BusMap capped at II = 2: every (II, jitter) combination is
+# certified unbindable (the PR 2 straggler), so `map_dfg` fails fast
+# with certificates attached — the canonical negative-entry case.
+INFEASIBLE_OPTS = {"mode": "busmap", "max_ii": 2}
+
+
+def _map_and_store(cache, dfg, cgra=CGRA, options=None, seed=0):
+    options = options or {}
+    res = map_dfg(dfg, cgra, seed=seed, **options)
+    canon = canonical_form(dfg)
+    cache.store(canon, cgra, options, res)
+    return res, canon
+
+
+def test_memory_hit_is_replayed_and_validated():
+    cache = MappingCache()
+    _map_and_store(cache, make_cnkm(3, 6))
+    perm = permute_dfg(make_cnkm(3, 6), seed=4)
+    hit = cache.lookup(canonical_form(perm), CGRA, {})
+    assert hit is not None and hit.source == "memory"
+    assert not hit.negative
+    assert hit.result.ok and hit.result.report is not None
+    assert hit.result.report.ok            # validator-accepted
+    assert set(perm.ops) <= set(hit.result.sched.dfg.ops)
+    assert cache.stats.mem_hits == 1 and cache.stats.replay_rejects == 0
+    assert cache.stats.replay_wall_s > 0   # the replay actually ran
+
+
+def test_miss_on_unknown_graph_and_on_different_options():
+    cache = MappingCache()
+    _map_and_store(cache, make_cnkm(2, 4))
+    assert cache.lookup(canonical_form(make_cnkm(2, 6)), CGRA, {}) is None
+    # Same DFG, different map_dfg knobs -> different key.
+    assert cache.lookup(canonical_form(make_cnkm(2, 4)), CGRA,
+                        {"mode": "busmap"}) is None
+    assert cache.stats.misses == 2
+
+
+def test_no_reuse_across_cgra_configs():
+    cache = MappingCache()
+    _map_and_store(cache, make_cnkm(2, 4))
+    assert cache.lookup(canonical_form(make_cnkm(2, 4)),
+                        CGRAConfig(rows=8, cols=8), {}) is None
+
+
+def test_disk_tier_survives_a_fresh_cache(tmp_path):
+    art = str(tmp_path / "serve")
+    cache1 = MappingCache(art_dir=art)
+    _map_and_store(cache1, make_cnkm(2, 6))
+    # Fresh in-memory state, same artifact dir (a restarted service).
+    cache2 = MappingCache(art_dir=art)
+    canon = canonical_form(permute_dfg(make_cnkm(2, 6), seed=9))
+    hit = cache2.lookup(canon, CGRA, {})
+    assert hit is not None and hit.source == "disk"
+    assert hit.result.ok
+    # Promoted to memory: second lookup is a memory hit.
+    assert cache2.lookup(canon, CGRA, {}).source == "memory"
+
+
+def test_negative_result_short_circuits(tmp_path):
+    cache = MappingCache(art_dir=str(tmp_path / "serve"))
+    bad = make_cnkm(5, 5)
+    res, _ = _map_and_store(cache, bad, options=INFEASIBLE_OPTS)
+    assert not res.ok and res.certificates
+    hit = cache.lookup(canonical_form(permute_dfg(bad, seed=2)), CGRA,
+                       INFEASIBLE_OPTS)
+    assert hit is not None and hit.negative
+    assert not hit.result.ok
+    assert len(hit.result.certificates) == len(res.certificates)
+    assert cache.stats.neg_hits == 1
+
+
+def test_heuristic_failure_is_not_cached_negative():
+    """An ok=False produced by budget exhaustion under one seed is not a
+    proof — caching it would mask feasible mappings under other seeds.
+    Only certificate-backed failures (attempts == 0) become negative
+    entries."""
+    cache = MappingCache()
+    opts = {"mode": "busmap", "max_ii": 2, "certify": False,
+            "bus_pressure": False, "mis_restarts": 1, "mis_iters": 40}
+    res, canon = _map_and_store(cache, make_cnkm(5, 5), options=opts)
+    assert not res.ok and res.attempts > 0     # heuristic, not certified
+    assert cache.stats.puts == 0 and cache.stats.neg_uncacheable == 1
+    assert cache.lookup(canon, CGRA, opts) is None
+
+
+def test_lru_eviction_bounds_memory_not_disk(tmp_path):
+    art = str(tmp_path / "serve")
+    cache = MappingCache(capacity=2, art_dir=art)
+    kernels = [make_cnkm(1, 2), make_cnkm(2, 4), make_cnkm(2, 6)]
+    for k in kernels:
+        _map_and_store(cache, k)
+    assert len(cache) == 2 and cache.stats.evictions == 1
+    # The memory-evicted first entry is still served from disk.
+    hit = cache.lookup(canonical_form(make_cnkm(1, 2)), CGRA, {})
+    assert hit is not None and hit.source == "disk"
+
+
+def test_blob_mismatch_is_never_reused():
+    cache = MappingCache()
+    _, canon = _map_and_store(cache, make_cnkm(2, 4))
+    key = cache.key(canon, CGRA, {})
+    # Simulate a digest collision: entry bytes claim a different graph.
+    cache._mem[key] = dataclasses.replace(cache._mem[key],
+                                          blob=b"not-this-graph")
+    assert cache.lookup(canon, CGRA, {}) is None
+    assert cache.stats.blob_mismatches == 1
+
+
+def test_replay_rejection_evicts_and_reports_miss(tmp_path):
+    cache = MappingCache(art_dir=str(tmp_path / "serve"))
+    _, canon = _map_and_store(cache, make_cnkm(2, 4))
+    key = cache.key(canon, CGRA, {})
+    entry = cache._mem[key]
+    # Corrupt the stored binding: two ops on one PE instance.
+    placement = dict(entry.result.placement)
+    quads = [o for o, v in placement.items() if v.kind == "quad"]
+    a, b = quads[0], quads[1]
+    placement[b] = dataclasses.replace(placement[a], op=b)
+    cache._mem[key] = dataclasses.replace(
+        entry, result=dataclasses.replace(entry.result,
+                                          placement=placement))
+    assert cache.lookup(canon, CGRA, {}) is None
+    assert cache.stats.replay_rejects == 1
+    assert key not in cache._mem          # evicted from both tiers
+    assert cache.lookup(canon, CGRA, {}) is None  # disk copy gone too

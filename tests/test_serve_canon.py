@@ -1,0 +1,130 @@
+"""Canonical DFG form (`repro.serve.canon`): hash invariance under
+vertex relabeling, discrimination across families, and cached-placement
+replay validity after relabeling."""
+
+import dataclasses
+
+import pytest
+
+from repro.core import CGRAConfig, map_dfg, make_cnkm, permute_dfg
+from repro.core.bandmap import MappingResult
+from repro.core.workloads import (make_loop_kernel, make_reduction,
+                                  make_stencil, make_tightly_coupled)
+from repro.core.validate import validate_mapping
+from repro.serve import canonical_form, canonical_hash, relabel_result
+
+# One representative per workload family (generator-name keyed so a
+# failure names the family).
+FAMILY_DFGS = {
+    "cnkm": lambda: make_cnkm(3, 6),
+    "loop": lambda: make_loop_kernel(n_chains=3, chain_len=4,
+                                     n_carries=1, seed=5),
+    "stencil": lambda: make_stencil(points=5, taps=3),
+    "reduction": lambda: make_reduction(width=8, arity=2),
+    "tight": lambda: make_tightly_coupled(4, 4, 1, seed=2),
+}
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_DFGS))
+def test_hash_invariant_under_permutation(family):
+    d = FAMILY_DFGS[family]()
+    ref = canonical_form(d)
+    for seed in range(10):
+        c = canonical_form(permute_dfg(d, seed=seed))
+        assert c.digest == ref.digest, (family, seed)
+        assert c.blob == ref.blob, (family, seed)
+
+
+def test_hash_differs_across_families():
+    digests = {f: canonical_hash(fn()) for f, fn in FAMILY_DFGS.items()}
+    assert len(set(digests.values())) == len(digests), digests
+
+
+def test_hash_differs_within_family_across_params():
+    assert canonical_hash(make_cnkm(2, 4)) != canonical_hash(
+        make_cnkm(2, 6))
+    assert canonical_hash(make_reduction(width=8, arity=2)) != \
+        canonical_hash(make_reduction(width=8, arity=4))
+
+
+def test_canonical_indices_are_a_bijection():
+    d = make_loop_kernel(seed=1)
+    c = canonical_form(d)
+    assert sorted(c.canon_of.values()) == list(range(len(d.ops)))
+    assert set(c.canon_of) == set(d.ops)
+    assert all(c.canon_of[c.op_of[i]] == i for i in range(c.n))
+
+
+def test_blob_equality_implies_isomorphism_map():
+    """Composing the two canonical maps must send edges to edges with
+    matching distances — the property that makes negative cache hits
+    sound."""
+    d1 = make_loop_kernel(n_chains=3, chain_len=3, n_carries=1, seed=7)
+    d2 = permute_dfg(d1, seed=11)
+    c1, c2 = canonical_form(d1), canonical_form(d2)
+    assert c1.blob == c2.blob
+    iso = {oid: c2.op_of[ci] for oid, ci in c1.canon_of.items()}
+    e1 = sorted((iso[e.src], iso[e.dst], e.distance) for e in d1.edges)
+    e2 = sorted((e.src, e.dst, e.distance) for e in d2.edges)
+    assert e1 == e2
+    for oid, op in d1.ops.items():
+        assert d2.ops[iso[oid]].kind == op.kind
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_DFGS))
+def test_cached_placement_replays_after_relabel(family):
+    """Map the family's kernel once, relabel the result onto a randomly
+    permuted instance through the canonical maps, and replay it through
+    the validator — the serving cache's hit path."""
+    d = FAMILY_DFGS[family]()
+    cgra = CGRAConfig(rows=8, cols=8)
+    res = map_dfg(d, cgra, seed=0)
+    assert res.ok, family
+
+    c = canonical_form(d)
+    canonical = relabel_result(res, c.canon_of)
+
+    perm = permute_dfg(d, seed=3)
+    cp = canonical_form(perm)
+    assert cp.blob == c.blob
+    inv = {ci: oid for oid, ci in cp.canon_of.items()}
+    replayed = relabel_result(canonical, inv)
+
+    # The replayed schedule covers exactly the permuted request's ops
+    # (plus scheduler-added clones/routing ops on fresh ids).
+    assert set(perm.ops) <= set(replayed.sched.dfg.ops)
+    extras = set(replayed.sched.dfg.ops) - set(perm.ops)
+    assert all(e > max(perm.ops) for e in extras)
+    for oid in perm.ops:
+        assert replayed.sched.dfg.ops[oid].kind == perm.ops[oid].kind
+
+    report = validate_mapping(replayed.sched, cgra, replayed.placement)
+    assert report.ok, (family, report.violations[:3])
+
+
+def test_relabel_keeps_vertex_op_fields_consistent():
+    d = make_cnkm(2, 4)
+    res = map_dfg(d, CGRAConfig(), seed=0)
+    c = canonical_form(d)
+    rel = relabel_result(res, c.canon_of)
+    assert all(v.op == oid for oid, v in rel.placement.items())
+    assert rel.report is None          # caller must revalidate
+
+
+def test_relabel_handles_failed_result_without_schedule():
+    failed = dataclasses.replace(
+        map_dfg(make_cnkm(2, 4), CGRAConfig(), seed=0),
+        ok=False, sched=None, placement={}, report=None)
+    rel = relabel_result(failed, {0: 5, 1: 6})
+    assert rel.sched is None and rel.placement == {}
+
+
+def test_mapping_result_serialization_roundtrip():
+    res = map_dfg(make_cnkm(2, 6), CGRAConfig(), seed=0)
+    back = MappingResult.from_bytes(res.to_bytes())
+    assert back.ok == res.ok and back.ii == res.ii
+    assert back.placement.keys() == res.placement.keys()
+    assert back.sched.time == res.sched.time
+    with pytest.raises(ValueError):
+        import pickle
+        MappingResult.from_bytes(pickle.dumps((999, res)))

@@ -1,0 +1,262 @@
+"""Batching scheduler + `MappingService` facade + transfer-round wiring:
+dedupe, deadline-ordered admission, co-tenant co-mapping, trace
+end-to-end, and the `schedule_transfer_rounds` serving/roofline hooks."""
+
+import collections
+
+import pytest
+
+from repro.core import (CGRAConfig, make_cnkm, make_loop_kernel,
+                        make_request_trace, permute_dfg, serve_catalog)
+from repro.core.schedule import mii
+from repro.serve import MappingService, MapRequest
+
+CGRA = CGRAConfig()
+
+
+# ------------------------------------------------------------ scheduler
+def test_in_flight_dedupe_single_computation():
+    svc = MappingService(max_workers=2)
+    base = make_cnkm(3, 6)
+    reqs = [MapRequest(dfg=permute_dfg(base, seed=s), cgra=CGRA,
+                       deadline=s, req_id=f"r{s}") for s in range(4)]
+    outs = svc.map_batch(reqs)
+    assert all(o.ok for o in outs)
+    sources = collections.Counter(o.source for o in outs)
+    assert sources["computed"] == 1 and sources["dedupe"] == 3
+    assert svc.cache.stats.puts == 1
+    # Every dedupe follower got its own validator-replayed copy.
+    assert svc.cache.stats.replay_rejects == 0
+    iis = {o.result.ii for o in outs}
+    assert len(iis) == 1
+
+
+def test_deadline_picks_the_dedupe_leader():
+    """Arrival order r0, r1 — but r1's deadline is earlier, so r1 must
+    be admitted first and become the computing leader."""
+    svc = MappingService(max_workers=1)
+    base = make_cnkm(2, 6)
+    outs = svc.map_batch([
+        MapRequest(dfg=base, cgra=CGRA, deadline=10.0, req_id="r0"),
+        MapRequest(dfg=permute_dfg(base, seed=1), cgra=CGRA,
+                   deadline=1.0, req_id="r1"),
+    ])
+    assert outs[0].source == "dedupe" and outs[1].source == "computed"
+
+
+def test_co_tenant_requests_are_co_mapped():
+    big = CGRAConfig(rows=16, cols=16)
+    svc = MappingService(max_workers=2)
+    opts = dict(max_bus_fanout=4, mis_restarts=4, mis_iters=4000,
+                max_ii=10)
+    reqs = [MapRequest(dfg=make_loop_kernel(n_chains=4, chain_len=4,
+                                            seed=s),
+                       cgra=big, options=opts, tenant="tenantA",
+                       deadline=s) for s in range(2)]
+    outs = svc.map_batch(reqs)
+    assert all(o.source == "comap" for o in outs)
+    assert all(o.ok for o in outs)
+    # Common II across the co-resident kernels (the co-mapper invariant).
+    assert len({o.result.ii for o in outs}) == 1
+    # Region results bind a group-dependent sub-array — never cached.
+    assert svc.cache.stats.puts == 0
+    # A repeated group re-runs co_map (no stale solo placements).
+    outs2 = svc.map_batch(reqs)
+    assert all(o.source == "comap" and not o.hit for o in outs2)
+
+
+def test_mixed_tenants_do_not_co_map():
+    svc = MappingService(max_workers=2)
+    outs = svc.map_batch([
+        MapRequest(dfg=make_cnkm(2, 4), cgra=CGRA, tenant="a"),
+        MapRequest(dfg=make_cnkm(2, 6), cgra=CGRA, tenant="b"),
+    ])
+    assert all(o.source == "computed" for o in outs)
+    assert all(o.ok for o in outs)
+
+
+def test_co_tenants_never_served_from_cache():
+    """A cached solo placement must not satisfy a co-resident request:
+    it binds the full array and would overlap the co-tenant's
+    placement."""
+    big = CGRAConfig(rows=16, cols=16)
+    opts = dict(max_bus_fanout=4, mis_restarts=4, mis_iters=4000,
+                max_ii=10)
+    base = make_loop_kernel(n_chains=4, chain_len=4, seed=0)
+    svc = MappingService(max_workers=2)
+    assert not svc.map(base, big, **opts).hit   # primes the solo cache
+    outs = svc.map_batch([
+        MapRequest(dfg=permute_dfg(base, seed=1), cgra=big,
+                   options=opts, tenant="t"),
+        MapRequest(dfg=make_loop_kernel(n_chains=4, chain_len=4, seed=1),
+                   cgra=big, options=opts, tenant="t"),
+    ])
+    assert all(o.source == "comap" and not o.hit for o in outs)
+    assert all(o.ok for o in outs)
+    assert len({o.result.ii for o in outs}) == 1
+
+
+def test_co_tenants_honor_min_ii():
+    """The II floor a request would get solo must survive co-tenant
+    grouping (`co_map` gained ``min_ii`` for exactly this)."""
+    big = CGRAConfig(rows=16, cols=16)
+    opts = dict(max_bus_fanout=4, mis_restarts=4, mis_iters=4000,
+                max_ii=10, min_ii=5)
+    outs = MappingService(max_workers=2).map_batch([
+        MapRequest(dfg=make_loop_kernel(n_chains=4, chain_len=4, seed=s),
+                   cgra=big, options=opts, tenant="t")
+        for s in range(2)])
+    assert all(o.ok and o.result.ii >= 5 for o in outs)
+
+
+def test_lone_tenant_uses_the_cache():
+    """A tenant alone in its batch has nothing to be co-resident with,
+    so a cached solo placement is sound to reuse."""
+    svc = MappingService(max_workers=2)
+    base = make_cnkm(2, 6)
+    assert not svc.map(base, CGRA).hit
+    out = svc.map(permute_dfg(base, seed=8), CGRA, tenant="t")
+    assert out.hit and out.source == "memory" and out.ok
+
+
+def test_failed_co_map_falls_back_for_every_kernel(monkeypatch):
+    """After a failed group run (arbitration / merged-validation), the
+    region-locally-ok placements still clash on shared scopes — every
+    kernel must fall back to a solo full-array map."""
+    import dataclasses
+
+    import repro.comap as comap_pkg
+    real_co_map = comap_pkg.co_map
+
+    def failing_co_map(dfgs, cgra, **kw):
+        cm = real_co_map(dfgs, cgra, **kw)
+        return dataclasses.replace(cm, ok=False)
+
+    monkeypatch.setattr(comap_pkg, "co_map", failing_co_map)
+    svc = MappingService(max_workers=2)
+    outs = svc.map_batch([
+        MapRequest(dfg=make_cnkm(2, 4), cgra=CGRA, tenant="t"),
+        MapRequest(dfg=make_cnkm(2, 6), cgra=CGRA, tenant="t"),
+    ])
+    assert all(o.source == "computed" for o in outs)
+    assert all(o.ok for o in outs)
+
+
+def test_outcome_wall_includes_queueing():
+    """ServeOutcome.wall_s is the serve-side completion latency, never
+    less than the mapper's own wall time."""
+    svc = MappingService(max_workers=1)
+    outs = svc.map_batch([MapRequest(dfg=make_cnkm(n, m), cgra=CGRA)
+                          for n, m in [(2, 4), (2, 6), (3, 6)]])
+    assert all(o.wall_s >= o.result.wall_s for o in outs)
+
+
+def test_isomorphic_co_tenants_are_not_deduped():
+    """Two isomorphic kernels of one tenant are distinct co-resident
+    instances — both must be placed (in disjoint regions of the shared
+    fabric, in global coordinates), not collapsed onto one
+    computation."""
+    big = CGRAConfig(rows=16, cols=16)
+    opts = dict(max_bus_fanout=4, mis_restarts=4, mis_iters=4000,
+                max_ii=10)
+    base = make_loop_kernel(n_chains=4, chain_len=4, seed=0)
+    svc = MappingService(max_workers=2)
+    outs = svc.map_batch([
+        MapRequest(dfg=base, cgra=big, options=opts, tenant="t"),
+        MapRequest(dfg=permute_dfg(base, seed=2), cgra=big,
+                   options=opts, tenant="t"),
+    ])
+    assert all(o.source == "comap" and o.ok for o in outs)
+    pes = [frozenset(v.pe for v in o.result.placement.values()
+                     if v.kind == "quad") for o in outs]
+    assert not (pes[0] & pes[1])                # disjoint regions
+
+
+# -------------------------------------------------------------- service
+def test_trace_end_to_end_hits_and_metrics():
+    svc = MappingService(max_workers=2)
+    trace = make_request_trace(14, scale="4x4", seed=3)
+    outs = svc.map_batch([MapRequest(dfg=t.dfg, cgra=CGRA,
+                                     deadline=t.deadline)
+                          for t in trace])
+    assert all(o.ok for o in outs)
+    m = svc.metrics()
+    assert m["requests"] == 14 and m["ok"] == 14
+    assert m["hits"] >= 1                  # Zipf head repeats
+    assert m["p95_ms"] >= m["p50_ms"] >= 0
+    assert m["throughput_rps"] > 0
+    assert set(m["sources"]) <= {"computed", "dedupe", "memory", "disk"}
+    assert "serve:" in svc.summary()
+
+
+def test_second_wave_hits_memory():
+    svc = MappingService(max_workers=2)
+    for wave_seed in (0, 1):
+        trace = make_request_trace(8, scale="4x4", seed=0)
+        # Re-permute each instance so only canonical hashing can hit.
+        reqs = [MapRequest(dfg=permute_dfg(t.dfg, seed=wave_seed * 31 + i),
+                           cgra=CGRA, deadline=t.deadline)
+                for i, t in enumerate(trace)]
+        outs = svc.map_batch(reqs)
+    assert all(o.hit for o in outs)        # second wave: all hits
+    assert all(o.source in ("memory", "dedupe") for o in outs)
+
+
+def test_single_request_facade():
+    svc = MappingService()
+    out = svc.map(make_cnkm(2, 4), CGRA, req_id="one")
+    assert out.ok and out.req_id == "one" and not out.hit
+    out2 = svc.map(permute_dfg(make_cnkm(2, 4), seed=5), CGRA)
+    assert out2.hit and out2.source == "memory"
+
+
+# ------------------------------------------------------ trace generator
+def test_request_trace_deterministic_and_zipf_skewed():
+    t1 = make_request_trace(60, scale="4x4", seed=7)
+    t2 = make_request_trace(60, scale="4x4", seed=7)
+    assert [t.name for t in t1] == [t.name for t in t2]
+    counts = collections.Counter(t.name for t in t1)
+    specs = serve_catalog("4x4")
+    assert counts[specs[0].name] > counts.get(specs[-1].name, 0)
+
+
+def test_permute_dfg_preserves_structure():
+    d = make_loop_kernel(n_chains=3, chain_len=4, n_carries=2, seed=9)
+    p = permute_dfg(d, seed=4)
+    assert len(p.ops) == len(d.ops) and len(p.edges) == len(d.edges)
+    assert sorted(o.kind.value for o in p.ops.values()) == \
+        sorted(o.kind.value for o in d.ops.values())
+    assert mii(p, CGRA) == mii(d, CGRA)
+    assert sorted(p.ops) == sorted(d.ops)   # same id set, reassigned
+
+
+# ------------------------------------------------- transfer-round wiring
+def test_serving_transfer_rounds_wiring():
+    from repro.configs import get_smoke_config
+    from repro.launch.serve import serving_transfer_rounds
+
+    cfg = get_smoke_config("gemma3-4b")
+    rounds, text = serving_transfer_rounds(cfg, batch=4, seq=64)
+    assert rounds and all(isinstance(r, list) for r in rounds)
+    moving = [name for rnd in rounds for name in rnd]
+    assert "tp_partial_out" in moving
+    assert "bandwidth round" in text
+
+
+def test_roofline_transfer_round_depth():
+    from benchmarks.roofline import transfer_round_depth
+
+    depth = transfer_round_depth("gemma3-4b", "train_4k", "single")
+    assert isinstance(depth, int) and depth >= 1
+    assert transfer_round_depth("no-such-arch", "train_4k",
+                                "single") is None
+    assert transfer_round_depth("gemma3-4b", "train_4k",
+                                "no-such-mesh") is None
+
+
+def test_map_trace_driver():
+    from repro.launch.serve import run_map_trace
+
+    m = run_map_trace(6, scale="4x4", rows=4, cols=4, seed=0,
+                      max_workers=2, quiet=True)
+    assert m["requests"] == 6 and m["ok"] == 6
