@@ -17,6 +17,10 @@ Sections (all written to artifacts/bench/bench_mis.json):
                    pressure-edge pipeline, per-certificate stats, and
                    the wall time of the certificate-less seed pipeline
                    for comparison.
+  exact          — the complete prover (`repro.exact`) and the
+                   exact-vs-portfolio race per paper kernel: wall
+                   times side by side, the portfolio's optimality gap
+                   against the proven-optimal II, and the race winner.
   cgra_8x8       — end-to-end maps on an 8x8 CGRAConfig, the scenario
                    the dense engine could not reach comfortably
                    (|V_C| > 2000).
@@ -419,11 +423,41 @@ def bench_serve(quick: bool = False) -> list[dict]:
     return rows
 
 
+def bench_exact(quick: bool = False) -> list[dict]:
+    """Exact prover and the race vs the portfolio, per paper kernel:
+    wall times side by side, the portfolio's optimality gap against the
+    proven-optimal II (``gap`` = portfolio II - exact II, 0 everywhere
+    the engine's defaults are already optimal), and which side won the
+    race.  The acceptance bar behind the differential suite: the prover
+    decides every paper kernel (``optimal`` true on all rows)."""
+    rows = []
+    kernels = PAPER_KERNELS if not quick \
+        else [k for k in PAPER_KERNELS if k not in [(2, 8), (5, 5)]]
+    for (n, m) in kernels:
+        for mode in ("bandmap", "busmap"):
+            dfg = make_cnkm(n, m)
+            po = map_dfg(dfg, CGRAConfig(), mode=mode)
+            ex = map_dfg(dfg, CGRAConfig(), mode=mode, backend="exact")
+            ra = map_dfg(dfg, CGRAConfig(), mode=mode, backend="race")
+            rows.append(dict(
+                kernel=cnkm_name(n, m), mode=mode, ok=ex.ok,
+                ii=ex.ii, mii=ex.mii, optimal=ex.optimal,
+                gap=(po.ii - ex.ii) if po.ok and ex.ok else None,
+                portfolio_wall_s=round(po.wall_s, 3),
+                exact_wall_s=round(ex.wall_s, 3),
+                race_winner=ra.backend,
+                race_wall_s=round(ra.wall_s, 3),
+                wall_s=round(ex.wall_s + ra.wall_s, 3)))
+            print(f"exact: {rows[-1]}")
+    return rows
+
+
 def run_all(quick: bool = False) -> dict:
     bench = dict(
         engine_speedup=bench_engine_speedup(quick),
         kernel_table=bench_kernel_table(quick),
         straggler=bench_stragglers(quick),
+        exact=bench_exact(quick),
         cgra_8x8=bench_8x8(quick),
         comap=bench_comap(quick),
         group_move=bench_group_move(quick),

@@ -1,10 +1,11 @@
 """Bench-regression gate for CI: diff a fresh ``bench_mis.json`` against
 the committed baseline and fail on a >2x wall-time regression of any
-kernel (kernel_table, straggler, cgra_8x8, comap, group_move and serve
-rows are all keyed by (kernel, mode) — the comap section gates the
-16x16 scale and the multi-kernel co-mapping path, group_move the kick
-neighbourhood's flag-on/off engine comparison, serve the Zipf-trace
-cacheless/cached throughput pair of the mapping service).
+kernel (kernel_table, straggler, exact, cgra_8x8, comap, group_move and
+serve rows are all keyed by (kernel, mode) — the exact section gates
+the complete prover and the exact-vs-portfolio race, the comap section
+the 16x16 scale and the multi-kernel co-mapping path, group_move the
+kick neighbourhood's flag-on/off engine comparison, serve the
+Zipf-trace cacheless/cached throughput pair of the mapping service).
 
   python benchmarks/check_regression.py \
       --baseline /tmp/bench_baseline.json \
@@ -35,7 +36,7 @@ import json
 import sys
 
 
-SECTIONS = ("kernel_table", "straggler", "cgra_8x8", "comap",
+SECTIONS = ("kernel_table", "straggler", "exact", "cgra_8x8", "comap",
             "group_move", "serve")
 
 

@@ -225,6 +225,13 @@ def bench_mis_engine(quick: bool = False):
                      row["wall_s"]])
         rows.append([f"straggler_{row['kernel']}_{row['mode']}_"
                      f"cert_total_s", row["cert_total_s"]])
+    for row in bench["exact"]:
+        rows.append([f"exact_{row['kernel']}_{row['mode']}_wall_s",
+                     row["exact_wall_s"]])
+        rows.append([f"exact_{row['kernel']}_{row['mode']}_gap",
+                     row["gap"]])
+        rows.append([f"race_{row['kernel']}_{row['mode']}_winner",
+                     row["race_winner"]])
     for row in bench["cgra_8x8"]:
         rows.append([f"map8x8_{row['kernel']}_{row['mode']}_wall_s",
                      row["wall_s"]])

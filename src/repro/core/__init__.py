@@ -4,6 +4,7 @@ allocation) plus the TPU-mesh bandwidth planner built on the same machinery.
 
 from .bandmap import MappingResult, compare_modes, map_dfg
 from .bitset import BitsetGraph
+from .cancel import CancelToken
 from .certify import IICertificate, certify_ii_infeasible
 from .cgra import CGRAConfig
 from .dfg import DFG, Edge, Op, OpKind
@@ -21,7 +22,7 @@ from .workloads import (COMAP_16X16_SPECS, TraceRequest, WorkloadSpec,
 
 __all__ = [
     "MappingResult", "compare_modes", "map_dfg", "BitsetGraph",
-    "IICertificate", "certify_ii_infeasible",
+    "CancelToken", "IICertificate", "certify_ii_infeasible",
     "CGRAConfig", "DFG", "Edge", "Op", "OpKind", "EXTRA_KERNELS",
     "PAPER_KERNELS", "all_paper_kernels", "cnkm_name", "make_cnkm",
     "GroupMoveConfig", "greedy_mis", "solve_mis", "solve_mis_portfolio",

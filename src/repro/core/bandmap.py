@@ -45,6 +45,20 @@ class MappingResult:
     # (II, jitter) combination proven unbindable and skipped).
     certificates: list[IICertificate] = dataclasses.field(
         default_factory=list)
+    # Set by the exact backend (`repro.exact`).  ``optimal`` marks an
+    # ok=True result whose II is proven minimal: every lower
+    # (II, jitter) combination from MII up carries a certificate (MII
+    # itself is a sound absolute lower bound, so the claim is absolute
+    # at II=MII and relative to the engine's deterministic schedule
+    # family above it).  ``proved_infeasible`` marks an ok=False result
+    # where *every* (II, jitter) combination up to ``max_ii`` was
+    # certified unbindable — the sound negative the serve cache admits
+    # even when validation attempts were spent along the way.
+    # ``backend`` records which engine produced the result
+    # ("portfolio" | "exact" | "race:portfolio" | "race:exact").
+    optimal: bool = False
+    proved_infeasible: bool = False
+    backend: str = "portfolio"
 
     @property
     def ii_ratio(self) -> float:
@@ -57,7 +71,8 @@ class MappingResult:
     # pickle round-trips it exactly; the version tag guards the serving
     # cache's on-disk artifacts (`serve.cache`) against silently loading
     # results written by an incompatible result layout.
-    SERIAL_VERSION = 1
+    # v2: optimal / proved_infeasible / backend fields (exact backend).
+    SERIAL_VERSION = 2
 
     def to_bytes(self) -> bytes:
         import pickle
@@ -91,8 +106,9 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
             n_exact_placements: int = 4,
             row_cache_limit: int | None = None,
             max_bus_fanout: int | None = None,
-            group_move: GroupMoveConfig | bool | None = None
-            ) -> MappingResult:
+            group_move: GroupMoveConfig | bool | None = None,
+            backend: str = "portfolio",
+            cancel=None) -> MappingResult:
     """Run the full 4-phase mapping.  Phase 4 (incomplete-mapping
     processing) = MIS restarts with fresh seeds, re-scheduling with jitter
     (ASAP schedules are II-invariant, so jitter supplies the diversity),
@@ -125,7 +141,37 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
     the flag-less engine; on, the kick periodically ejects and
     re-places whole blocking clusters — the move the tightly-coupled
     workloads (a VIO's bus-fed consumers spread over rows) need to
-    escape their ~90 % coverage stall."""
+    escape their ~90 % coverage stall.
+
+    ``backend`` selects the engine: ``"portfolio"`` (default, the loop
+    below), ``"exact"`` (the complete prover in `repro.exact.backend`,
+    with ``certify_budget`` as its per-combination node budget), or
+    ``"race"`` (both at once, first sound answer wins — see
+    `repro.exact.race`).  ``cancel`` (`core.cancel.CancelToken`) makes
+    the run cooperatively cancellable: polled between (II, jitter)
+    combinations, between harvest rounds, and inside the portfolio's
+    iteration loop; a cancelled run returns its best-effort ``ok=False``
+    result.  ``cancel=None`` (default) is bit-identical to the
+    flag-less engine."""
+    if backend != "portfolio":
+        from repro.exact import exact_map_dfg, race_map_dfg
+        if backend == "exact":
+            return exact_map_dfg(
+                dfg, cgra, mode=mode, use_grf=use_grf, max_ii=max_ii,
+                min_ii=min_ii, seed=seed, node_budget=certify_budget,
+                bus_pressure=bus_pressure, row_cache_limit=row_cache_limit,
+                max_bus_fanout=max_bus_fanout, cancel=cancel)
+        if backend == "race":
+            return race_map_dfg(
+                dfg, cgra, mode=mode, use_grf=use_grf, max_ii=max_ii,
+                min_ii=min_ii, mis_restarts=mis_restarts,
+                mis_iters=mis_iters, seed=seed, certify=certify,
+                bus_pressure=bus_pressure, certify_budget=certify_budget,
+                n_exact_placements=n_exact_placements,
+                row_cache_limit=row_cache_limit,
+                max_bus_fanout=max_bus_fanout, group_move=group_move,
+                cancel=cancel)
+        raise ValueError(f"unknown mapping backend {backend!r}")
     t_start = _time.perf_counter()
     the_mii = mii(dfg, cgra)
     cache_limit = ROW_CACHE_LIMIT if row_cache_limit is None \
@@ -138,7 +184,11 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
     certificates: list[IICertificate] = []
     last: tuple = (None, None, None, 0, (0, 0))
     for cur_ii in range(max(the_mii, min_ii or 0), max_ii + 1):
+        if cancel is not None and cancel.is_set():
+            break
         for jitter in (0, 1, 2, 3):
+            if cancel is not None and cancel.is_set():
+                break
             try:
                 sched = schedule_dfg(dfg, cgra, mode=mode, ii=cur_ii,
                                      max_ii=cur_ii, use_grf=use_grf,
@@ -158,7 +208,7 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
                     cg, sched, cgra, jitter=jitter,
                     node_budget=certify_budget, row_cache=shared_u8,
                     n_placements=n_exact_placements,
-                    row_cache_limit=cache_limit)
+                    row_cache_limit=cache_limit, cancel=cancel)
                 if cert is not None:
                     # Proven unbindable: skip the whole portfolio budget
                     # for this (II, jitter) combination.
@@ -218,8 +268,10 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
             # the same trajectories until the iteration budget is spent.
             fresh = budget
             for rnd in range(4 * budget):
+                if cancel is not None and cancel.is_set():
+                    break
                 start_it = sbts.it
-                bests = sbts.run(remaining, target=n_ops)
+                bests = sbts.run(remaining, target=n_ops, cancel=cancel)
                 remaining -= sbts.it - start_it
                 order = np.argsort(-bests.sum(axis=1), kind="stable")
                 for k in order:
@@ -282,6 +334,13 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
                         sbts.reset_seed(int(k), constructive_init(
                             cg, sched, cgra, seed=base + fresh))
     sched, placement, report, size, cg_size = last
+    # attempts == 0 with certificates attached means every (II, jitter)
+    # combination that scheduled was *proven* unbindable before any
+    # stochastic search ran — a full-range UNSAT proof, unless a cancel
+    # cut the II loop short (then the certificates only cover a prefix
+    # of the range and the result must not claim the proof).
+    proved = bool(certificates) and attempts == 0 \
+        and not (cancel is not None and cancel.is_set())
     return MappingResult(
         ok=False, mode=mode, ii=sched.ii if sched else -1, mii=the_mii,
         n_routing_pes=sched.n_routing_ops if sched else 0,
@@ -290,7 +349,7 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
         cg_size=cg_size, mis_size=size,
         n_ops=len(sched.dfg.ops) if sched else 0, attempts=attempts,
         wall_s=_time.perf_counter() - t_start,
-        certificates=certificates)
+        certificates=certificates, proved_infeasible=proved)
 
 
 def compare_modes(dfg: DFG, cgra: CGRAConfig, *, seed: int = 0,

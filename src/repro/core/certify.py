@@ -207,6 +207,7 @@ def _search_complete(cg: ConflictGraph, node_budget: int,
                      cgra: CGRAConfig | None = None,
                      n_solutions: int = 1,
                      row_cache_limit: int | None = None,
+                     on_solution=None, cancel=None,
                      ) -> tuple[bool | None, list[np.ndarray], int]:
     """Stage 3: exact bounded CSP.  Returns (verdict, placements, nodes):
     verdict False = proven infeasible, True = ``placements`` holds up to
@@ -218,7 +219,25 @@ def _search_complete(cg: ConflictGraph, node_budget: int,
     path in `map_dfg`: when the validator rejects the first placement's
     bus packing, the next candidates are already in hand — the search
     yields them for a few extra nodes — instead of falling back to the
-    full portfolio."""
+    full portfolio.
+
+    ``on_solution`` turns the enumeration into an online decision
+    procedure (the exact backend's mode, `repro.exact`): each complete
+    placement is handed to the callback as a bool [n] membership; a
+    True return accepts it and stops the search (verdict True, the
+    placement recorded), a False return discards it and the search
+    *continues exhausting the space*.  Exhaustion with every placement
+    discarded is verdict False: no complete conflict-free placement the
+    callback accepts exists.  Under the symmetry-pruned pass that claim
+    extends to the full space only when the callback is equivariant
+    under the verified row/column automorphisms — `validate_mapping`
+    is (it reads row/column indices only as labels, and its restart
+    RNG sequence is index-independent), which is what lets the exact
+    backend treat an all-rejected exhaustion as UNSAT.
+
+    ``cancel`` (a `core.cancel.CancelToken`) is polled every 64 nodes;
+    a cancelled search returns verdict None (unknown), never a proof.
+    """
     n = cg.n
     ops = sorted(cg.op_vertices)
     k = len(ops)
@@ -276,7 +295,19 @@ def _search_complete(cg: ConflictGraph, node_budget: int,
             nodes[0] += 1
             if nodes[0] > budget:
                 return None
+            if cancel is not None and not nodes[0] & 63 \
+                    and cancel.is_set():
+                return None
             if not unassigned.any():
+                if on_solution is not None:
+                    # Online mode: accept (stop) or discard (keep
+                    # exhausting) — see the docstring's UNSAT claim.
+                    memb = np.zeros(n, dtype=bool)
+                    memb[chosen[chosen >= 0]] = True
+                    if on_solution(memb):
+                        solutions.append(chosen.copy())
+                        return True
+                    return False
                 # Complete placement: record it and keep backtracking
                 # (returning False) until the requested count is in hand.
                 solutions.append(chosen.copy())
@@ -368,6 +399,7 @@ def certify_ii_infeasible(cg: ConflictGraph, sched: ScheduledDFG,
                           row_cache: np.ndarray | None = None,
                           n_placements: int = 1,
                           row_cache_limit: int | None = None,
+                          on_solution=None, cancel=None,
                           ) -> tuple[IICertificate | None,
                                      list[np.ndarray] | None]:
     """Run the certificate stages against one scheduled DFG.
@@ -377,7 +409,13 @@ def certify_ii_infeasible(cg: ConflictGraph, sched: ScheduledDFG,
     ``certificate`` is None and ``placements`` holds up to
     ``n_placements`` complete conflict-free membership vectors stage 3
     enumerated within budget for the caller to validate directly (the
-    list is empty when the budget ran out before any was found)."""
+    list is empty when the budget ran out before any was found).
+
+    ``on_solution``/``cancel`` are forwarded to `_search_complete` (see
+    its docstring): with a callback installed, an exhausted search whose
+    every placement was discarded still certifies the schedule — the
+    certificate detail records that the claim covers callback-accepted
+    placements, not just conflict-free ones."""
     t0 = _time.perf_counter()
     detail = _resource_count_bound(sched, cgra)
     if detail is not None:
@@ -389,9 +427,12 @@ def certify_ii_infeasible(cg: ConflictGraph, sched: ScheduledDFG,
                              0, _time.perf_counter() - t0), None
     verdict, placements, nodes = _search_complete(
         cg, node_budget, row_cache=row_cache, cgra=cgra,
-        n_solutions=n_placements, row_cache_limit=row_cache_limit)
+        n_solutions=n_placements, row_cache_limit=row_cache_limit,
+        on_solution=on_solution, cancel=cancel)
     if verdict is False:
-        detail = (f"exhaustive search: no complete independent placement "
+        what = "validator-accepted" if on_solution is not None \
+            else "complete independent"
+        detail = (f"exhaustive search: no {what} placement "
                   f"of {len(cg.op_vertices)} ops over {cg.n} candidates")
         return IICertificate(sched.ii, jitter, "exhausted", detail,
                              nodes, _time.perf_counter() - t0), None

@@ -193,18 +193,27 @@ class PortfolioSBTS:
     def _row(self, v: int) -> np.ndarray:
         return self._u8[v] if self._u8 is not None else self.g.row_u8(v)
 
-    def run(self, max_iters: int, target: int | None = None) -> np.ndarray:
+    def run(self, max_iters: int, target: int | None = None,
+            cancel=None) -> np.ndarray:
         """Advance all seeds up to ``max_iters`` iterations each (an
         iteration is a full (1,0) add sweep or one (1,1) swap, matching
         the single-trajectory SBTS accounting); stop early when any
         seed's best reaches ``target``.  Returns per-seed best
-        memberships ``bool [K, n]``."""
+        memberships ``bool [K, n]``.
+
+        ``cancel`` (a `core.cancel.CancelToken`) is polled at the top of
+        every iteration: a cancelled run stops before advancing further
+        and returns the bests so far.  ``cancel=None`` leaves the
+        trajectories bit-identical to the flag-less engine (the polling
+        never touches the RNG streams)."""
         if self.g.n == 0 or self.k == 0:
             return self.best
         if target is not None and (self.best_size >= target).any():
             return self.best
         n, k_idx = self.g.n, np.arange(self.k)
         for _ in range(max_iters):
+            if cancel is not None and cancel.is_set():
+                break
             self.it += 1
             it = self.it
             # Periodic group-move kick: spend this iteration ejecting and

@@ -1,0 +1,138 @@
+"""Exact-vs-portfolio race: first *sound* answer wins.
+
+`race_map_dfg` runs the complete prover (`repro.exact.backend`) and the
+stochastic portfolio (`bandmap.map_dfg`) on the same problem in two
+threads and returns the first answer that is **sound**:
+
+- an ``ok=True`` result (validator-accepted — from either side);
+- an ``ok=False`` with ``proved_infeasible`` — the exact backend
+  certified every (II, jitter) combination up to ``max_ii``, or the
+  portfolio's pre-existing certificate-backed fast-fail covered the
+  whole range with ``attempts == 0`` (`map_dfg` folds that judgement
+  into the same flag, and clears it when a cancel cut the loop short).
+
+A portfolio budget exhaustion is *not* sound — a different seed might
+succeed — so the race holds it and waits for the prover.  The loser is
+cancelled through a shared `core.cancel.CancelToken` chain threaded
+into `map_dfg`'s harvest rounds, `PortfolioSBTS.run`'s iteration loop
+and the CSP's node loop, so losing work stops within a bounded number
+of iterations instead of running out its budget.  A crashed prover
+degrades the race to portfolio-only (and vice versa); the request only
+fails if both sides fail.
+
+The contract is deliberately "first sound answer", not "best answer":
+when the portfolio lands a validated II before the prover finishes,
+that II is returned even though the prover might later certify a lower
+one — the race trades the optimality *claim* (the winner's ``optimal``
+flag is only set on exact wins) for latency, never soundness.  Winners
+are tagged ``backend="race:exact"`` / ``"race:portfolio"``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+
+from repro.core.bandmap import MappingResult
+from repro.core.cancel import CancelToken
+from repro.core.cgra import CGRAConfig
+from repro.core.dfg import DFG
+
+from .backend import exact_map_dfg
+
+
+def _is_sound(res: MappingResult | None) -> bool:
+    """A result the race may return without waiting for the rival.
+
+    Deliberately *not* the raw ``attempts == 0 and certificates``
+    pattern: a side cancelled mid-II-loop returns certificates that
+    only cover a prefix of the range, and `map_dfg` / `exact_map_dfg`
+    already fold the "covered everything, uncancelled" judgement into
+    ``proved_infeasible``."""
+    return res is not None and (res.ok or res.proved_infeasible)
+
+
+def race_map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
+                 use_grf: bool | None = None, max_ii: int = 32,
+                 min_ii: int | None = None, mis_restarts: int = 10,
+                 mis_iters: int = 20000, seed: int = 0,
+                 certify: bool = True, bus_pressure: bool = True,
+                 certify_budget: int = 200_000,
+                 n_exact_placements: int = 4,
+                 row_cache_limit: int | None = None,
+                 max_bus_fanout: int | None = None,
+                 group_move=None,
+                 exact_node_budget: int | None = None,
+                 cancel=None) -> MappingResult:
+    """Race the exact backend against the portfolio (module docstring).
+
+    Portfolio knobs are `map_dfg`'s; ``exact_node_budget`` is the
+    prover's per-(II, jitter) node budget (defaults to
+    ``certify_budget``).  Both sides run under the same ``seed``, so
+    they explore the same deterministic schedule family — which is what
+    makes an exact UNSAT binding on the portfolio side's schedules too.
+    ``cancel`` cancels the whole race."""
+    from repro.core.bandmap import map_dfg
+
+    tok_exact = CancelToken(parent=cancel)
+    tok_port = CancelToken(parent=cancel)
+
+    def run_exact() -> MappingResult:
+        return exact_map_dfg(
+            dfg, cgra, mode=mode, use_grf=use_grf, max_ii=max_ii,
+            min_ii=min_ii, seed=seed,
+            node_budget=exact_node_budget if exact_node_budget
+            is not None else certify_budget,
+            bus_pressure=bus_pressure, max_bus_fanout=max_bus_fanout,
+            row_cache_limit=row_cache_limit, cancel=tok_exact)
+
+    def run_portfolio() -> MappingResult:
+        return map_dfg(
+            dfg, cgra, mode=mode, use_grf=use_grf, max_ii=max_ii,
+            min_ii=min_ii, mis_restarts=mis_restarts,
+            mis_iters=mis_iters, seed=seed, certify=certify,
+            bus_pressure=bus_pressure, certify_budget=certify_budget,
+            n_exact_placements=n_exact_placements,
+            row_cache_limit=row_cache_limit,
+            max_bus_fanout=max_bus_fanout, group_move=group_move,
+            cancel=tok_port)
+
+    pool = ThreadPoolExecutor(max_workers=2)
+    try:
+        futs = {pool.submit(run_exact): "exact",
+                pool.submit(run_portfolio): "portfolio"}
+        held: dict[str, MappingResult] = {}
+        errors: dict[str, BaseException] = {}
+        winner: tuple[str, MappingResult] | None = None
+        pending = set(futs)
+        while pending and winner is None:
+            done, pending = wait(pending, return_when=FIRST_COMPLETED)
+            for fut in done:
+                side = futs[fut]
+                try:
+                    res = fut.result()
+                except Exception as exc:   # crashed worker: degrade to
+                    errors[side] = exc     # the surviving side
+                    continue
+                if _is_sound(res):
+                    winner = (side, res)
+                    break
+                held[side] = res
+        # First sound answer in hand (or no side can produce one):
+        # stop the rival — it polls the token within a bounded number
+        # of iterations/nodes.
+        tok_exact.cancel()
+        tok_port.cancel()
+    finally:
+        pool.shutdown(wait=True)
+    if winner is not None:
+        side, res = winner
+        return dataclasses.replace(res, backend=f"race:{side}")
+    # No sound answer: prefer the portfolio's best-effort failure (it
+    # carries the partial-coverage diagnostics), then the prover's.
+    for side in ("portfolio", "exact"):
+        if side in held:
+            return dataclasses.replace(held[side],
+                                       backend=f"race:{side}")
+    raise errors["portfolio"] if "portfolio" in errors \
+        else errors["exact"]

@@ -17,13 +17,17 @@ ids* (`serve.canon.relabel_result`), positive or negative:
   stays the single soundness authority, the cache never vouches for a
   binding itself.  A replay rejection evicts the entry and reports a
   miss (the service then maps from scratch).
-- **negative** — an ``ok=False`` result, stored **only when it is
-  certificate-backed**: ``attempts == 0`` with certificates attached
-  means every (II, jitter) schedule explored was *proven* unbindable
-  by `core.certify` before any stochastic search ran.  A heuristic
-  failure (portfolio budget exhausted under one seed) is never stored:
-  a different seed might succeed, so caching it would mask feasible
-  mappings.  Negative hits short-circuit the whole pipeline.  Their
+- **negative** — an ``ok=False`` result, stored **only when it is a
+  proof**: either ``attempts == 0`` with certificates attached (every
+  (II, jitter) schedule explored was *proven* unbindable by
+  `core.certify` before any stochastic search ran) or
+  ``proved_infeasible`` (the exact backend, `repro.exact`, certified
+  every combination up to ``max_ii`` — the race path's UNSAT winners
+  carry this flag even though the losing portfolio spent attempts in
+  parallel).  A heuristic failure (portfolio budget exhausted under
+  one seed) is never stored: a different seed might succeed, so
+  caching it would mask feasible mappings.  Negative hits
+  short-circuit the whole pipeline.  Their
   guarantee: a hit requires byte-equal canonical ``blob``s (request
   isomorphic to the cached problem), and the serving scheduler maps
   the *canonical* DFG copy with a digest-derived seed
@@ -219,13 +223,17 @@ class MappingCache:
         otherwise the result is for the request's own labeling and is
         relabeled through ``canon.canon_of``.
 
-        Failed results are stored only when certificate-backed
-        (``attempts == 0`` and certificates present — no stochastic
-        search ever ran, so the failure is a proof, not a bad seed);
-        heuristic failures are refused (returns None) and will be
+        Failed results are stored only when they are *proofs*: either
+        certificate-backed fast-fails (``attempts == 0`` and
+        certificates present — no stochastic search ever ran) or exact
+        UNSAT results (``proved_infeasible`` — every (II, jitter)
+        combination in range certified by the exact backend, which may
+        well have spent validation attempts along the way; the race
+        path, where the portfolio ran in parallel, lands here too).
+        Heuristic failures are refused (returns None) and will be
         recomputed, possibly under a luckier seed."""
-        if not result.ok and not (result.attempts == 0
-                                  and result.certificates):
+        if not result.ok and not result.proved_infeasible \
+                and not (result.attempts == 0 and result.certificates):
             self.stats.neg_uncacheable += 1
             return None
         key = self.key(canon, cgra, options)

@@ -30,7 +30,13 @@ A batch of `MapRequest`s is served in four stages:
    thread pool, with per-request seed diversification (two identical
    budgets don't retrace the same portfolio trajectories).  Workers
    only run the pure mapper; all cache traffic stays on the calling
-   thread, so the cache needs no locking.
+   thread, so the cache needs no locking.  Options flow to `map_dfg`
+   verbatim, so ``options={"backend": "race"}`` races the exact prover
+   against the portfolio per request (`repro.exact.race`): exact SAT
+   winners land in the cache as proven-``optimal`` positives, and
+   exact UNSAT winners (``proved_infeasible``) are admitted as
+   certificate-backed negative entries that short-circuit every
+   isomorphic request from then on (`serve.cache`).
 
 The scheduler is synchronous per batch — `run` returns when every
 request has an outcome — which is what the benchmark loop and the

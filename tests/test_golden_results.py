@@ -4,6 +4,12 @@ per CnKm kernel in both BandMap and BusMap modes, under the default
 (dense) engine and reproduced bit-for-bit by the bitset/portfolio engine;
 any future engine change that shifts them must be deliberate.
 
+Since the exact backend (`repro.exact`) landed, every golden II is also
+**proven optimal** within the engine's schedule family:
+`test_golden_iis_are_proven_optimal` re-derives the whole table with
+the complete prover, so a golden II is no longer just "what the
+portfolio found under seed 0" but the best any seed could ever find.
+
 The two BusMap stragglers (C2K8, C5K5) burn most of their wall time
 proving II=MII infeasible, so they run under ``-m slow``.
 """
@@ -43,6 +49,17 @@ def test_golden_ii_and_routing(n, m, mode):
     assert r.ok, f"{cnkm_name(n, m)}:{mode} failed: {r.summary()}"
     assert (r.ii, r.n_routing_pes) == GOLDEN[(n, m, mode)], r.summary()
     assert r.mis_size == r.n_ops
+
+
+@pytest.mark.parametrize("n,m,mode", CASES)
+def test_golden_iis_are_proven_optimal(n, m, mode):
+    """The exact prover terminates in budget on every golden case and
+    certifies the golden II as engine-optimal: lower IIs are
+    certificate-UNSAT (or unschedulable), this one validates."""
+    r = map_dfg(make_cnkm(n, m), CGRAConfig(), mode=mode,
+                backend="exact")
+    assert r.ok and r.optimal, r.summary()
+    assert r.ii == GOLDEN[(n, m, mode)][0], r.summary()
 
 
 def test_golden_bandmap_beats_busmap():

@@ -96,6 +96,40 @@ def test_heuristic_failure_is_not_cached_negative():
     assert cache.lookup(canon, CGRA, opts) is None
 
 
+def test_race_unsat_proof_is_cached_negative():
+    """A race-produced UNSAT (``proved_infeasible``) is admissible even
+    though the losing portfolio spent validation attempts in parallel —
+    the admission rule is "is it a proof", not "did a search run"."""
+    cache = MappingCache()
+    opts = dict(INFEASIBLE_OPTS, backend="race", certify=False)
+    bad = make_cnkm(5, 5)
+    res, _ = _map_and_store(cache, bad, options=opts)
+    assert not res.ok and res.proved_infeasible
+    assert res.backend == "race:exact"
+    assert cache.stats.puts == 1
+    hit = cache.lookup(canonical_form(permute_dfg(bad, seed=6)), CGRA,
+                       opts)
+    assert hit is not None and hit.negative
+    assert hit.result.proved_infeasible
+    assert cache.stats.neg_hits == 1
+
+
+def test_admission_is_keyed_on_the_proof_flag():
+    """Synthesized boundary cases around the store() guard: attempts
+    spent + proof flag is admitted, attempts spent without the flag
+    (the racing portfolio's budget exhaustion) is refused."""
+    cache = MappingCache()
+    base = map_dfg(make_cnkm(5, 5), CGRA, **INFEASIBLE_OPTS)
+    assert not base.ok and base.proved_infeasible
+    canon = canonical_form(make_cnkm(5, 5))
+    proof = dataclasses.replace(base, attempts=17)
+    assert cache.store(canon, CGRA, {"v": 1}, proof) is not None
+    unsound = dataclasses.replace(base, attempts=17,
+                                  proved_infeasible=False)
+    assert cache.store(canon, CGRA, {"v": 2}, unsound) is None
+    assert cache.stats.neg_uncacheable == 1
+
+
 def test_lru_eviction_bounds_memory_not_disk(tmp_path):
     art = str(tmp_path / "serve")
     cache = MappingCache(capacity=2, art_dir=art)
