@@ -449,6 +449,31 @@ def bench_exact(quick: bool = False) -> list[dict]:
                 race_wall_s=round(ra.wall_s, 3),
                 wall_s=round(ex.wall_s + ra.wall_s, 3)))
             print(f"exact: {rows[-1]}")
+    # 8x8-fabric characterization (ROADMAP exact-engine rung (c)): the
+    # prover's candidate space is ops x 64 PEs, but the bigger fabric
+    # *relaxes* contention — every paper kernel proves optimal at II=1
+    # in tens of milliseconds, so the wall is dominated by conflict-
+    # graph construction, not search.  Rows are keyed "CnKm@8x8" and
+    # gated by check_regression like any other exact row.
+    big = CGRAConfig(rows=8, cols=8)
+    big_kernels = [(2, 6), (4, 8)] if quick \
+        else [(2, 6), (3, 6), (4, 8), (5, 5)]
+    for (n, m) in big_kernels:
+        for mode in ("bandmap", "busmap"):
+            dfg = make_cnkm(n, m)
+            po = map_dfg(dfg, big, mode=mode)
+            ex = map_dfg(dfg, big, mode=mode, backend="exact")
+            ra = map_dfg(dfg, big, mode=mode, backend="race")
+            rows.append(dict(
+                kernel=f"{cnkm_name(n, m)}@8x8", mode=mode, ok=ex.ok,
+                ii=ex.ii, mii=ex.mii, optimal=ex.optimal,
+                gap=(po.ii - ex.ii) if po.ok and ex.ok else None,
+                portfolio_wall_s=round(po.wall_s, 3),
+                exact_wall_s=round(ex.wall_s, 3),
+                race_winner=ra.backend,
+                race_wall_s=round(ra.wall_s, 3),
+                wall_s=round(ex.wall_s + ra.wall_s, 3)))
+            print(f"exact: {rows[-1]}")
     return rows
 
 

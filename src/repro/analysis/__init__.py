@@ -1,0 +1,131 @@
+"""Static pre-mapping analysis: sound verdicts before any search runs.
+
+Two passes live here:
+
+- **Domain pass** (`dfglint` + `demand`) — over a (DFG, CGRAConfig)
+  pair: structural lint (dangling edges, distance-0 cycles, VIO/VOO
+  shape rules shared with `core.workloads`' generator assertions),
+  recomputed ResMII/RecMII floors, and the generalized
+  implied-bandwidth-demand bound over TIN/TOUT port tuples per
+  (scope, slot) — ROADMAP exact-engine rung (b), lifting
+  `exact.hall`'s forced-drive-pair restriction so dense VIO/VOO
+  components prune with *no* schedule and *no* routing ops in sight.
+- **Repo pass** (`astlint`) — the CI linter enforcing the engine's
+  written-down invariants over ``src/repro`` source (see its module
+  docstring for the rule table).
+
+Soundness contract
+------------------
+Every verdict this package emits is a **sound negative**: "no engine
+backend maps this (DFG, config) at II < k" (`demand.demand_mii`) or
+"... at any II" (`static_infeasibility`).  Precisely:
+
+- *error*-severity `dfglint` findings hold absolutely: the pipeline
+  either cannot process the DFG at all (dangling edge, distance-0
+  cycle) or every candidate pair of some dependence edge conflicts
+  under `conflict._dep_ok`, for every schedule.
+- `demand` bounds are relative to the engine's deterministic schedule
+  family — every schedule `schedule_dfg` can emit — the *same* family
+  `exact.backend` proves UNSAT over, so `exact_map_dfg` differentially
+  confirms each one (tests/test_analysis_demand.py property-tests both
+  directions: no verdict ever flags a combination any backend maps).
+
+The analyzer never emits "feasible": absence of findings promises
+nothing.  Consumers:
+
+- `bandmap.map_dfg(static_prepass=True)` skips II values below the
+  static floor, recording one `IICertificate` per skipped II with
+  ``stage='static-demand'`` and ``jitter=-1`` (all jitters at once —
+  the bound is schedule-free).
+- `serve.scheduler` rejects statically-infeasible requests on the
+  calling thread (``source="static_reject"``) with a certificate-backed
+  negative `MappingResult` that `serve.cache.store` admits
+  (``attempts == 0``, ``proved_infeasible=True``) — the worker pool is
+  never touched.
+"""
+
+from __future__ import annotations
+
+import time as _time
+
+from repro.core.bandmap import MappingResult
+from repro.core.certify import IICertificate
+from repro.core.cgra import CGRAConfig
+from repro.core.dfg import DFG
+from repro.core.schedule import mii
+
+# `astlint` (the repo pass) is deliberately NOT imported here: it is a
+# standalone CLI module (`python -m repro.analysis.astlint`) with no
+# dependency on the engine, and importing it from the package __init__
+# would shadow the `-m` entry point with a runpy warning.
+from .demand import (DemandBound, demand_mii, effective_fanout,
+                     implied_demand_bounds)
+from .dfglint import (LintFinding, fatal_findings,
+                      generator_invariant_findings, lint_dfg)
+
+__all__ = [
+    "DemandBound", "LintFinding", "analyze", "demand_mii",
+    "effective_fanout", "fatal_findings",
+    "generator_invariant_findings", "implied_demand_bounds",
+    "lint_dfg", "static_infeasibility",
+]
+
+
+def analyze(dfg: DFG, cgra: CGRAConfig, *,
+            max_bus_fanout: int | None = None
+            ) -> tuple[list, list]:
+    """Convenience: (lint findings, demand bounds) for one pair."""
+    findings = lint_dfg(dfg, cgra, max_bus_fanout=max_bus_fanout)
+    if fatal_findings(findings):
+        return findings, []
+    return findings, implied_demand_bounds(
+        dfg, cgra, max_bus_fanout=max_bus_fanout)
+
+
+def static_infeasibility(dfg: DFG, cgra: CGRAConfig, *,
+                         mode: str = "bandmap", max_ii: int = 32,
+                         min_ii: int | None = None,
+                         max_bus_fanout: int | None = None
+                         ) -> MappingResult | None:
+    """Full-range static verdict: a certificate-backed negative
+    `MappingResult` when the pair provably cannot map at any
+    II <= ``max_ii`` (fatal structural lint, or a MII/demand floor past
+    the range), else ``None``.
+
+    The result is cache-admissible under `serve.cache.store`'s existing
+    negative rules: ``attempts == 0`` with certificates attached and
+    ``proved_infeasible=True`` — the same encoding a full
+    certified-UNSAT engine run produces, minus the engine."""
+    t0 = _time.perf_counter()
+    findings = lint_dfg(dfg, cgra, max_bus_fanout=max_bus_fanout)
+    fatal = fatal_findings(findings)
+    floor = None
+    if not fatal:
+        floor = demand_mii(dfg, cgra, max_bus_fanout=max_bus_fanout)
+        if floor <= max_ii:
+            return None
+        detail = f"static demand floor II >= {floor} > max_ii={max_ii}"
+    else:
+        detail = "; ".join(f.summary() for f in fatal[:3])
+    try:
+        the_mii = mii(dfg, cgra)
+    except (ValueError, KeyError, RuntimeError):
+        # Fatally malformed DFGs (dangling edges, cycles) can defeat
+        # even the MII recurrence scan; the claim covers the full range
+        # regardless.
+        the_mii = 1
+    start = max(the_mii if not fatal else 1, min_ii or 0, 1)
+    certs = [IICertificate(ii=ii, jitter=-1, stage="static-demand",
+                           detail=detail, nodes=0, wall_s=0.0)
+             for ii in range(start, max_ii + 1)]
+    if not certs:
+        # Range empty (e.g. MII already past max_ii): one certificate
+        # carries the whole-range claim.
+        certs = [IICertificate(ii=-1, jitter=-1, stage="static-demand",
+                               detail=detail, nodes=0, wall_s=0.0)]
+    return MappingResult(
+        ok=False, mode=mode, ii=-1, mii=the_mii, n_routing_pes=0,
+        ports_per_vio={}, placement={}, sched=None, report=None,
+        cg_size=(0, 0), mis_size=0, n_ops=len(dfg.ops), attempts=0,
+        wall_s=_time.perf_counter() - t0, certificates=certs,
+        proved_infeasible=True, backend="static")

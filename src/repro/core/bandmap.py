@@ -108,6 +108,7 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
             max_bus_fanout: int | None = None,
             group_move: GroupMoveConfig | bool | None = None,
             backend: str = "portfolio",
+            static_prepass: bool = True,
             cancel=None) -> MappingResult:
     """Run the full 4-phase mapping.  Phase 4 (incomplete-mapping
     processing) = MIS restarts with fresh seeds, re-scheduling with jitter
@@ -142,6 +143,16 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
     re-places whole blocking clusters — the move the tightly-coupled
     workloads (a VIO's bus-fed consumers spread over rows) need to
     escape their ~90 % coverage stall.
+
+    ``static_prepass`` (default on) consults the schedule-free demand
+    analysis (`repro.analysis.demand`) once up front: II values below
+    the static floor are skipped outright, each recorded as an
+    `IICertificate` with ``stage='static-demand'`` and ``jitter=-1``
+    (the bound covers every jitter at once).  The floor is provably
+    MII on every shipped kernel family — singleton demand components —
+    so the default changes nothing there; on dense VIO/VOO components
+    it skips (II, jitter) combinations the certificate stages would
+    otherwise exhaust one schedule at a time.
 
     ``backend`` selects the engine: ``"portfolio"`` (default, the loop
     below), ``"exact"`` (the complete prover in `repro.exact.backend`,
@@ -180,12 +191,27 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
         group_move = GroupMoveConfig()
     elif group_move is False:
         group_move = None
+    static_floor, static_detail = the_mii, ""
+    if static_prepass:
+        from repro.analysis.demand import implied_demand_bounds
+        for b in implied_demand_bounds(dfg, cgra,
+                                       max_bus_fanout=max_bus_fanout):
+            if b.min_ii > static_floor:
+                static_floor, static_detail = b.min_ii, b.summary()
     attempts = 0
     certificates: list[IICertificate] = []
     last: tuple = (None, None, None, 0, (0, 0))
     for cur_ii in range(max(the_mii, min_ii or 0), max_ii + 1):
         if cancel is not None and cancel.is_set():
             break
+        if cur_ii < static_floor:
+            # Schedule-free demand bound: unbindable at every jitter
+            # (jitter=-1 marks the whole-slice claim) — skip the
+            # schedule, the certificate stages and the portfolio.
+            certificates.append(IICertificate(
+                ii=cur_ii, jitter=-1, stage="static-demand",
+                detail=static_detail, nodes=0, wall_s=0.0))
+            continue
         for jitter in (0, 1, 2, 3):
             if cancel is not None and cancel.is_set():
                 break

@@ -77,7 +77,11 @@ class IICertificate:
     """Witness that one (II, jitter) schedule admits no complete binding."""
     ii: int
     jitter: int
-    stage: str       # 'resource-count' | 'clique-merge' | 'exhausted'
+    # 'resource-count' | 'clique-merge' | 'exhausted', plus
+    # 'static-demand' for the schedule-free pre-pass bounds
+    # (`repro.analysis`): those carry jitter=-1, meaning the claim
+    # covers every jitter of the II at once.
+    stage: str
     detail: str      # human-readable witness
     nodes: int       # stage-3 search nodes spent (0 for stages 1-2)
     wall_s: float

@@ -34,6 +34,19 @@ from .dfg import DFG, OpKind
 from .kernels_cnkm import make_cnkm
 
 
+def _assert_invariants(d: DFG) -> DFG:
+    """Checked form of the generator-family invariants every builder in
+    this module upholds — <= 1 VIO predecessor per op, one distinct
+    producer per VOO.  The rule definitions (and the why) live in one
+    place, `analysis.dfglint.generator_invariant_findings`; this
+    assertion and the lint pass share them verbatim."""
+    from repro.analysis.dfglint import generator_invariant_findings
+    bad = generator_invariant_findings(d)
+    assert not bad, "generator invariant violated: " + \
+        "; ".join(f.summary() for f in bad)
+    return d
+
+
 @dataclasses.dataclass(frozen=True)
 class WorkloadSpec:
     """A named, reproducible workload: family + params."""
@@ -121,13 +134,12 @@ def make_loop_kernel(n_chains: int = 4, chain_len: int = 4,
         d.remove_edge(vin, late)
         d.add_edge(vin, late, distance=vin_carry_distance)
 
-    # One VOO per chain end (distinct producers: two VOOs fed by one op
-    # land in one modulo slot and need one column — an OPORT clash no
-    # binding can resolve).
+    # One VOO per chain end (the shared-voo-producer invariant —
+    # rationale in `analysis.dfglint.generator_invariant_findings`).
     for j in range(min(n_outputs, n_chains)):
         vo = d.add_op(OpKind.VOUT, f"out{j}")
         d.add_edge(chains[j][-1], vo)
-    return d
+    return _assert_invariants(d)
 
 
 def make_stencil(points: int = 4, taps: int = 3, *, seed: int = 0) -> DFG:
@@ -153,7 +165,7 @@ def make_stencil(points: int = 4, taps: int = 3, *, seed: int = 0) -> DFG:
         vo = d.add_op(OpKind.VOUT, f"out{j}")
         d.add_edge(prev, vo)
         vouts.append(vo)
-    return d
+    return _assert_invariants(d)
 
 
 def make_reduction(width: int = 8, arity: int = 2, *,
@@ -191,7 +203,7 @@ def make_reduction(width: int = 8, arity: int = 2, *,
         level += 1
     vo = d.add_op(OpKind.VOUT, "out0")
     d.add_edge(frontier[0], vo)
-    return d
+    return _assert_invariants(d)
 
 
 def make_tightly_coupled(n_vios: int = 8, fanout: int = 8,
@@ -222,8 +234,8 @@ def make_tightly_coupled(n_vios: int = 8, fanout: int = 8,
     adjacent rows (adjacent rows ride the free NSEW neighbour links).
 
     ``seed`` shuffles which lanes carry the cross links and where each
-    run starts; the shape is otherwise deterministic.  Invariants
-    upheld: <= 1 VIO predecessor per op, distinct producers per VOO.
+    run starts; the shape is otherwise deterministic.  The family
+    invariants (see `_assert_invariants`) are checked on return.
     """
     assert cross_links <= fanout
     rng = np.random.default_rng(seed)
@@ -244,7 +256,7 @@ def make_tightly_coupled(n_vios: int = 8, fanout: int = 8,
     for j in range(min(n_outputs, fanout)):
         vo = d.add_op(OpKind.VOUT, f"out{j}")
         d.add_edge(groups[-1][j], vo)
-    return d
+    return _assert_invariants(d)
 
 
 FAMILIES: dict[str, Callable[..., DFG]] = {

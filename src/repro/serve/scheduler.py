@@ -7,7 +7,14 @@ A batch of `MapRequest`s is served in four stages:
    under a loaded worker pool tight-deadline requests start earliest.
 2. **Cache** — each request's canonical form is looked up in the
    `MappingCache`; hits (positive, validator-replayed, or soundly
-   negative) resolve immediately.  Tenant-tagged requests skip the
+   negative) resolve immediately.  Cache misses then pass the *static
+   admission check* (`repro.analysis.static_infeasibility`): a request
+   whose (DFG, fabric, options) is statically proven unmappable over
+   its whole II range resolves right here with
+   ``source="static_reject"`` — a certificate-backed negative that is
+   also stored, so every later isomorphic request is a negative cache
+   hit.  The check runs on the calling thread (it is microseconds) and
+   the worker pool is never touched.  Tenant-tagged requests skip the
    cache and dedupe: co-residency asks for a *joint* placement with
    the batch's co-tenants, which no cached solo placement satisfies,
    and two isomorphic kernels of one tenant are distinct co-resident
@@ -51,6 +58,7 @@ import os
 import time as _time
 from concurrent.futures import ThreadPoolExecutor, as_completed
 
+from repro.analysis import static_infeasibility
 from repro.core.bandmap import MappingResult, map_dfg
 from repro.core.cgra import CGRAConfig
 from repro.core.dfg import DFG
@@ -83,7 +91,8 @@ class ServeOutcome:
     req_id: str
     result: MappingResult
     hit: bool
-    source: str          # memory | disk | negative-* | dedupe | computed | comap
+    source: str          # memory | disk | negative-* | dedupe | computed
+    #                    # | comap | static_reject
     # Serve-side latency: batch admission -> this request resolved,
     # queue wait included (NOT just the mapper's internal wall time).
     wall_s: float
@@ -156,6 +165,10 @@ class RequestScheduler:
                                     effs[i])
             if hit is not None:
                 resolve_hit(i, hit, dedupe=False)
+                continue
+            neg = self._static_reject(requests[i], canons[i], effs[i])
+            if neg is not None:
+                resolve(i, neg, hit=False, source="static_reject")
             else:
                 pending.append(i)
 
@@ -200,6 +213,10 @@ class RequestScheduler:
                                     effs[i])
             if hit is not None:
                 resolve_hit(i, hit, dedupe=False)
+                continue
+            neg = self._static_reject(requests[i], canons[i], effs[i])
+            if neg is not None:
+                resolve(i, neg, hit=False, source="static_reject")
             else:
                 solo.append(i)
         solo.sort(key=lambda i: (requests[i].deadline, i))
@@ -287,6 +304,26 @@ class RequestScheduler:
         return outcomes
 
     # --------------------------------------------------------- helpers
+    def _static_reject(self, req: MapRequest, canon: "CanonicalForm",
+                       eff: dict) -> MappingResult | None:
+        """Static admission check on a cache miss (calling thread —
+        the analyzer is schedule-free structure scanning).  A verdict
+        is stored under the canonical key first — the sound negative
+        `cache.store` admits (``attempts == 0`` + certificates +
+        ``proved_infeasible``) — then relabeled onto the request's own
+        ids for the outcome."""
+        res = static_infeasibility(
+            canonical_dfg(req.dfg, canon), req.cgra,
+            mode=eff.get("mode", "bandmap"),
+            max_ii=eff.get("max_ii", 32),
+            min_ii=eff.get("min_ii"),
+            max_bus_fanout=eff.get("max_bus_fanout"))
+        if res is None:
+            return None
+        self.cache.store(canon, req.cgra, eff, res, canonical=True)
+        inv = {ci: oid for oid, ci in canon.canon_of.items()}
+        return relabel_result(res, inv)
+
     def _solo_options(self, req: MapRequest,
                       canon: CanonicalForm) -> dict:
         """Per-request seed diversification: a pinned seed (in options

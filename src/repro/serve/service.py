@@ -22,6 +22,7 @@ hit sources, throughput — which `launch/serve.py`,
 
 from __future__ import annotations
 
+import threading
 import time as _time
 from collections import Counter
 
@@ -41,6 +42,14 @@ class MappingService:
     in-memory (benchmarks, tests); pass `DEFAULT_ART_DIR` (or any path)
     to persist mappings across processes."""
 
+    # Shared mutable metrics state: concurrent `map_batch` callers (the
+    # facade is the natural thing to share across server threads) must
+    # not interleave counter updates.  The tuple is the contract the
+    # `lock-guarded-state` astlint rule enforces: these attributes are
+    # only mutated under ``self._lock``.
+    _lock_guarded = ("_latencies", "_sources", "_requests", "_hits",
+                     "_ok", "_batch_wall_s")
+
     def __init__(self, *, cache: MappingCache | None = None,
                  capacity: int = 256, art_dir: str | None = None,
                  max_workers: int | None = None,
@@ -50,6 +59,7 @@ class MappingService:
         self.scheduler = RequestScheduler(self.cache,
                                           max_workers=max_workers,
                                           base_seed=base_seed)
+        self._lock = threading.Lock()
         self._latencies: list[float] = []
         self._sources: Counter[str] = Counter()
         self._requests = 0
@@ -69,32 +79,38 @@ class MappingService:
                   ) -> list[ServeOutcome]:
         t0 = _time.perf_counter()
         outcomes = self.scheduler.run(requests)
-        self._batch_wall_s += _time.perf_counter() - t0
-        for out in outcomes:
-            self._requests += 1
-            self._hits += int(out.hit)
-            self._ok += int(out.result is not None and out.result.ok)
-            self._sources[out.source] += 1
-            self._latencies.append(out.wall_s)
+        wall = _time.perf_counter() - t0
+        with self._lock:
+            self._batch_wall_s += wall
+            for out in outcomes:
+                self._requests += 1
+                self._hits += int(out.hit)
+                self._ok += int(out.result is not None
+                                and out.result.ok)
+                self._sources[out.source] += 1
+                self._latencies.append(out.wall_s)
         return outcomes
 
     # ---------------------------------------------------------- metrics
     def metrics(self) -> dict:
-        lat = np.asarray(self._latencies, dtype=float)
+        with self._lock:         # consistent snapshot vs map_batch
+            lat = np.asarray(self._latencies, dtype=float)
+            n_req, n_ok, n_hits = self._requests, self._ok, self._hits
+            wall = self._batch_wall_s
+            sources = dict(self._sources)
         p50, p95 = (float(np.percentile(lat, 50)),
                     float(np.percentile(lat, 95))) if lat.size else (0., 0.)
         return dict(
-            requests=self._requests,
-            ok=self._ok,
-            hits=self._hits,
-            hit_rate=round(self._hits / self._requests, 4)
-            if self._requests else 0.0,
+            requests=n_req,
+            ok=n_ok,
+            hits=n_hits,
+            hit_rate=round(n_hits / n_req, 4) if n_req else 0.0,
             p50_ms=round(p50 * 1e3, 3),
             p95_ms=round(p95 * 1e3, 3),
-            wall_s=round(self._batch_wall_s, 3),
-            throughput_rps=round(self._requests / self._batch_wall_s, 2)
-            if self._batch_wall_s else 0.0,
-            sources=dict(self._sources),
+            wall_s=round(wall, 3),
+            throughput_rps=round(n_req / wall, 2) if wall else 0.0,
+            sources=sources,
+            static_rejects=sources.get("static_reject", 0),
             cache=self.cache.stats.as_dict(),
         )
 

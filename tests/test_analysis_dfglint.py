@@ -1,0 +1,170 @@
+"""Structural/shape lint rules: each fires on a constructed DFG and
+stays silent on everything the generators ship.
+
+`generator_invariant_findings` is also the checked form of the
+invariants `core.workloads` used to state only in docstrings — the
+generators now assert it on every build, so the sweep below doubles as
+a test that the promotion did not reject any shipped workload.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.analysis.dfglint import (LintFinding, fatal_findings,
+                                    generator_invariant_findings,
+                                    lint_dfg)
+from repro.core.cgra import CGRAConfig
+from repro.core.dfg import DFG, OpKind
+from repro.core.workloads import generate, permute_dfg, sweep_specs
+
+CGRA = CGRAConfig()
+
+
+def _base() -> tuple[DFG, int, int, int]:
+    d = DFG()
+    v = d.add_op(OpKind.VIN, "v")
+    x = d.add_op(OpKind.COMPUTE, "x")
+    o = d.add_op(OpKind.VOUT, "o")
+    d.add_edge(v, x)
+    d.add_edge(x, o)
+    return d, v, x, o
+
+
+def _rules(findings: list[LintFinding]) -> set[str]:
+    return {f.rule for f in findings}
+
+
+# ------------------------------------------------------- error rules
+def test_dangling_edge():
+    d, v, x, o = _base()
+    d.edges.append(type(d.edges[0])(src=x, dst=99, distance=0))
+    f = lint_dfg(d, CGRA)
+    assert "dangling-edge" in _rules(f)
+    assert fatal_findings(f)
+
+
+def test_zero_distance_cycle():
+    d, v, x, o = _base()
+    y = d.add_op(OpKind.COMPUTE, "y")
+    d.add_edge(x, y)
+    d.add_edge(y, x)                      # distance 0 back-edge
+    f = lint_dfg(d, CGRA)
+    assert "zero-distance-cycle" in _rules(f)
+    assert fatal_findings(f)
+
+
+def test_nonzero_distance_cycle_is_legal():
+    d, v, x, o = _base()
+    y = d.add_op(OpKind.COMPUTE, "y")
+    d.add_edge(x, y)
+    d.add_edge(y, x, distance=1)          # loop-carried: fine
+    assert "zero-distance-cycle" not in _rules(lint_dfg(d, CGRA))
+
+
+def test_vin_has_pred():
+    d, v, x, o = _base()
+    b = d.add_op(OpKind.VIN, "b")
+    d.add_edge(x, b)
+    f = lint_dfg(d, CGRA)
+    assert "vin-has-pred" in _rules(f)
+    assert fatal_findings(f)
+
+
+def test_vout_has_succ():
+    d, v, x, o = _base()
+    y = d.add_op(OpKind.COMPUTE, "y")
+    d.add_edge(o, y)
+    f = lint_dfg(d, CGRA)
+    assert "vout-has-succ" in _rules(f)
+    assert fatal_findings(f)
+
+
+# -------------------------------------------------------- warn rules
+def test_vio_unconsumed():
+    d, v, x, o = _base()
+    d.add_op(OpKind.VIN, "lonely")
+    f = lint_dfg(d, CGRA)
+    assert "vio-unconsumed" in _rules(f)
+    assert not fatal_findings(f)          # warn, not error
+
+
+def test_vio_overfanout_needs_cgra():
+    d, v, x, o = _base()
+    for i in range(CGRA.pes_per_ibus):    # rd = m_eff + 1 total
+        y = d.add_op(OpKind.COMPUTE, f"y{i}")
+        d.add_edge(v, y)
+    assert "vio-overfanout" in _rules(lint_dfg(d, CGRA))
+    assert "vio-overfanout" not in _rules(lint_dfg(d))   # no fabric
+    # tightening max_bus_fanout flags earlier
+    d2, v2, x2, o2 = _base()
+    y = d2.add_op(OpKind.COMPUTE, "y")
+    d2.add_edge(v2, y)
+    assert "vio-overfanout" in _rules(
+        lint_dfg(d2, CGRA, max_bus_fanout=1))
+
+
+def test_multi_vio_pred():
+    d, v, x, o = _base()
+    v2 = d.add_op(OpKind.VIN, "v2")
+    d.add_edge(v2, x)                     # x now reads two VINs
+    y = d.add_op(OpKind.COMPUTE, "y")     # keep v2 otherwise consumed
+    d.add_edge(v2, y)
+    f = generator_invariant_findings(d)
+    assert "multi-vio-pred" in _rules(f)
+    assert "multi-vio-pred" in _rules(lint_dfg(d, CGRA))
+
+
+def test_shared_voo_producer():
+    d, v, x, o = _base()
+    o2 = d.add_op(OpKind.VOUT, "o2")
+    d.add_edge(x, o2)                     # x drives two VOUTs
+    f = generator_invariant_findings(d)
+    assert "shared-voo-producer" in _rules(f)
+
+
+# ------------------------------------------------ ordering + silence
+def test_errors_sort_before_warns():
+    d, v, x, o = _base()
+    d.add_op(OpKind.VIN, "lonely")        # warn
+    b = d.add_op(OpKind.VIN, "b")
+    d.add_edge(x, b)                      # error
+    sev = [fd.severity for fd in lint_dfg(d, CGRA)]
+    assert "error" in sev and "warn" in sev
+    assert sev == sorted(sev, key=lambda s: s != "error")
+
+
+def test_summary_names_rule_and_ops():
+    d, v, x, o = _base()
+    b = d.add_op(OpKind.VIN, "b")
+    d.add_edge(x, b)
+    s = [f.summary() for f in lint_dfg(d, CGRA)
+         if f.rule == "vin-has-pred"][0]
+    assert "vin-has-pred" in s and "error" in s
+
+
+@pytest.mark.parametrize("spec", sweep_specs("4x4") + sweep_specs("8x8"),
+                         ids=lambda s: s.name)
+def test_generators_clean(spec):
+    """No errors and no invariant violations on any shipped spec.
+    `vio-overfanout` is informational here — high-fanout VINs are
+    exactly what the scheduler's port-splitting handles."""
+    d = spec.build()                      # asserts invariants itself
+    for g in (d, permute_dfg(d, seed=3)):
+        f = lint_dfg(g, CGRA)
+        assert not fatal_findings(f), (spec.name, f)
+        assert _rules(f) <= {"vio-overfanout"}, (spec.name, f)
+
+
+def test_generator_assertion_rejects_violation(monkeypatch):
+    """The promoted invariant actually guards the generators: feed the
+    shared checker a violating DFG through `_assert_invariants`."""
+    from repro.core import workloads
+    d, v, x, o = _base()
+    v2 = d.add_op(OpKind.VIN, "v2")
+    d.add_edge(v2, x)
+    y = d.add_op(OpKind.COMPUTE, "y")
+    d.add_edge(v2, y)
+    with pytest.raises(AssertionError, match="multi-vio-pred"):
+        workloads._assert_invariants(d)
+    assert workloads._assert_invariants(generate("cnkm", n=2, m=4))

@@ -1,0 +1,102 @@
+"""Serve-side static admission: provably-doomed requests are rejected
+at admission with a certificate-backed negative — no worker-pool time —
+and the negative is cache-admissible, so isomorphic resubmissions hit
+negative memory."""
+
+import collections
+
+from repro.core import CGRAConfig, make_cnkm, permute_dfg
+from repro.core.dfg import DFG, OpKind
+from repro.serve import MappingService, MapRequest
+
+CGRA = CGRAConfig()
+
+
+def _dense_vio() -> DFG:
+    """Row component of 3 VIOs -> static floor II >= 3."""
+    d = DFG()
+    vins = [d.add_op(OpKind.VIN, f"v{i}") for i in range(3)]
+    for i in range(2):
+        x = d.add_op(OpKind.COMPUTE, f"x{i}")
+        d.add_edge(vins[i], x)
+        d.add_edge(vins[i + 1], x)
+        o = d.add_op(OpKind.VOUT, f"o{i}")
+        d.add_edge(x, o)
+    return d
+
+
+def test_static_reject_short_circuits_admission():
+    svc = MappingService(max_workers=1)
+    out = svc.map(_dense_vio(), CGRA, max_ii=2, req_id="doomed")
+    assert out.source == "static_reject" and not out.hit
+    assert not out.ok
+    r = out.result
+    assert r.backend == "static"
+    assert r.proved_infeasible and r.attempts == 0
+    assert r.certificates and all(c.stage == "static-demand"
+                                  for c in r.certificates)
+    # stored as a negative entry -> the cache took a put
+    assert svc.cache.stats.puts == 1
+    assert svc.metrics()["static_rejects"] == 1
+
+
+def test_isomorphic_resubmission_hits_negative_memory():
+    svc = MappingService(max_workers=1)
+    base = _dense_vio()
+    out1 = svc.map(base, CGRA, max_ii=2)
+    assert out1.source == "static_reject"
+    out2 = svc.map(permute_dfg(base, seed=7), CGRA, max_ii=2)
+    assert out2.hit and out2.source == "negative-memory"
+    assert out2.result.proved_infeasible
+    # only the first request paid for the analysis
+    assert svc.cache.stats.puts == 1
+
+
+def test_static_reject_does_not_touch_mappable_requests():
+    svc = MappingService(max_workers=2)
+    outs = svc.map_batch([
+        MapRequest(dfg=_dense_vio(), cgra=CGRA,
+                   options=dict(max_ii=2), deadline=0.0, req_id="bad"),
+        MapRequest(dfg=make_cnkm(2, 4), cgra=CGRA, deadline=1.0,
+                   req_id="good"),
+    ])
+    by_id = {o.req_id: o for o in outs}
+    assert by_id["bad"].source == "static_reject"
+    assert by_id["good"].source == "computed" and by_id["good"].ok
+    src = collections.Counter(o.source for o in outs)
+    assert src == {"static_reject": 1, "computed": 1}
+
+
+def test_malformed_dfg_rejected_with_lint_detail():
+    """A distance-0 cycle would make `map_dfg` raise inside a worker;
+    the static pre-pass turns it into a clean negative instead."""
+    d = DFG()
+    a = d.add_op(OpKind.COMPUTE, "a")
+    b = d.add_op(OpKind.COMPUTE, "b")
+    v = d.add_op(OpKind.VIN, "v")
+    o = d.add_op(OpKind.VOUT, "o")
+    d.add_edge(v, a)
+    d.add_edge(a, b)
+    d.add_edge(b, a)
+    d.add_edge(b, o)
+    svc = MappingService(max_workers=1)
+    out = svc.map(d, CGRA, max_ii=8)
+    assert out.source == "static_reject" and not out.ok
+    assert "zero-distance-cycle" in out.result.certificates[0].detail
+
+
+def test_solo_tenant_path_also_statically_rejected():
+    svc = MappingService(max_workers=1)
+    out = svc.map(_dense_vio(), CGRA, max_ii=2, tenant="t0")
+    assert out.source == "static_reject"
+    assert out.result.proved_infeasible
+
+
+def test_metrics_count_static_rejects():
+    svc = MappingService(max_workers=1)
+    svc.map(_dense_vio(), CGRA, max_ii=2)
+    svc.map(make_cnkm(2, 4), CGRA)
+    m = svc.metrics()
+    assert m["requests"] == 2
+    assert m["static_rejects"] == 1
+    assert m["sources"]["static_reject"] == 1
