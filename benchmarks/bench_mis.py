@@ -218,17 +218,35 @@ def bench_engine_speedup(quick: bool = False) -> dict:
 
 
 def bench_kernel_table(quick: bool = False) -> list[dict]:
-    """Map wall-time / II / routing PEs per kernel and mode."""
+    """Map wall-time / II / routing PEs per kernel and mode, plus the
+    traced per-phase wall breakdown and the deterministic engine
+    counters `check_regression.py` gates (CSP nodes and portfolio
+    iterations are seed-determined, so they gate far tighter than the
+    noisy walls)."""
+    from repro.obs import Tracer
+
     rows = []
     kw = dict(mis_restarts=4, mis_iters=8000, max_ii=8) if quick else {}
     for (n, m) in PAPER_KERNELS:
         for mode in ("bandmap", "busmap"):
-            r = map_dfg(make_cnkm(n, m), CGRAConfig(), mode=mode, **kw)
+            tr = Tracer()
+            r = map_dfg(make_cnkm(n, m), CGRAConfig(), mode=mode,
+                        tracer=tr, **kw)
+            phases = {name: dict(count=agg["count"],
+                                 total_s=round(agg["total_s"], 4))
+                      for name, agg in tr.phase_breakdown().items()}
+            counters = tr.registry.snapshot()["counters"]
             rows.append(dict(
                 kernel=cnkm_name(n, m), mode=mode, ok=r.ok, ii=r.ii,
                 mii=r.mii, routing_pes=r.n_routing_pes,
                 v_c=r.cg_size[0], e_c=r.cg_size[1],
-                attempts=r.attempts, wall_s=round(r.wall_s, 3)))
+                attempts=r.attempts, wall_s=round(r.wall_s, 3),
+                phases=phases,
+                counters=dict(
+                    certify_csp_nodes=int(
+                        counters.get("certify.csp_nodes", 0)),
+                    portfolio_iters=int(
+                        counters.get("portfolio.iters", 0)))))
             print(f"kernel_table: {rows[-1]}")
     return rows
 

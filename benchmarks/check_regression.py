@@ -27,6 +27,18 @@ so it never changes with the live engine) is timed in both runs and used
 as a machine-speed reference: budgets are scaled up by
 ``fresh_seed_solve / baseline_seed_solve`` when the current machine is
 slower (never tightened when it is faster).
+
+Counter gate
+------------
+Rows carrying a ``counters`` dict (kernel_table does, via the traced
+`repro.obs` run) are additionally gated on each counter's value —
+certify CSP nodes and portfolio iterations today.  These are
+seed-determined and machine-independent, so the gate is *tighter* than
+the wall gate (``--counter-factor``, default 1.25, no machine-speed
+scaling) with its own absolute floor (``--counter-floor``, default 500:
+a jump from 10 to 40 nodes is noise-free but meaningless).  A counter
+present in the baseline row but absent from the fresh row fails — an
+engine path silently lost its instrumentation.
 """
 
 from __future__ import annotations
@@ -48,8 +60,20 @@ def _rows(bench: dict) -> dict[tuple, float]:
     return out
 
 
+def _counter_rows(bench: dict) -> dict[tuple, float]:
+    """(section, kernel, mode, counter) -> value, for every row that
+    carries a ``counters`` dict."""
+    out = {}
+    for section in SECTIONS:
+        for row in bench.get(section, []):
+            for name, value in (row.get("counters") or {}).items():
+                out[(section, row["kernel"], row["mode"], name)] = value
+    return out
+
+
 def check(baseline: dict, fresh: dict, factor: float = 2.0,
-          floor: float = 0.2) -> list[str]:
+          floor: float = 0.2, counter_factor: float = 1.25,
+          counter_floor: float = 500.0) -> list[str]:
     old, new = _rows(baseline), _rows(fresh)
     failures = []
     for section in SECTIONS:
@@ -78,6 +102,25 @@ def check(baseline: dict, fresh: dict, factor: float = 2.0,
             failures.append(
                 f"{section}:{kernel}:{mode}: {old[key]:.3f}s -> "
                 f"{new[key]:.3f}s exceeds {factor}x budget")
+    # Deterministic counter gate — no machine-speed scaling (CSP nodes
+    # and portfolio iterations are seed-determined), tighter factor.
+    old_c, new_c = _counter_rows(baseline), _counter_rows(fresh)
+    for key in sorted(old_c):
+        section, kernel, mode, name = key
+        label = f"{section}:{kernel}:{mode}:{name}"
+        if key not in new_c:
+            failures.append(
+                f"{label}: counter present in baseline but missing "
+                f"from fresh run — instrumentation silently lost")
+            continue
+        budget = counter_factor * max(old_c[key], counter_floor)
+        status = "FAIL" if new_c[key] > budget else "ok"
+        print(f"{status}: {label} {old_c[key]:.0f} -> {new_c[key]:.0f} "
+              f"(budget {budget:.0f})")
+        if new_c[key] > budget:
+            failures.append(
+                f"{label}: {old_c[key]:.0f} -> {new_c[key]:.0f} "
+                f"exceeds {counter_factor}x counter budget")
     return failures
 
 
@@ -87,12 +130,15 @@ def main() -> int:
     ap.add_argument("--fresh", required=True)
     ap.add_argument("--factor", type=float, default=2.0)
     ap.add_argument("--floor", type=float, default=0.2)
+    ap.add_argument("--counter-factor", type=float, default=1.25)
+    ap.add_argument("--counter-floor", type=float, default=500.0)
     args = ap.parse_args()
     with open(args.baseline) as f:
         baseline = json.load(f)
     with open(args.fresh) as f:
         fresh = json.load(f)
-    failures = check(baseline, fresh, args.factor, args.floor)
+    failures = check(baseline, fresh, args.factor, args.floor,
+                     args.counter_factor, args.counter_floor)
     if failures:
         print("\nbench regression gate FAILED:")
         for msg in failures:

@@ -45,6 +45,17 @@ tests/test_analysis_astlint.py):
     global-RNG calls (``random.*``, ``np.random.<fn>`` other than the
     seeded ``default_rng``).
 
+``tracer-default-none``
+    In the engine modules threaded with tracing (``core/mis.py``,
+    ``core/certify.py``, ``core/bandmap.py``, ``core/conflict.py``,
+    ``exact/backend.py``, ``exact/race.py``, ``comap/comap.py``):
+    every function accepting a ``tracer`` parameter must default it to
+    ``None`` (the NullTracer contract — untraced runs stay
+    bit-identical and allocation-free), and no condition (``if`` /
+    ``while`` / ternary / ``assert``) may reference ``tracer`` except
+    the exact identity checks ``tracer is None`` / ``tracer is not
+    None`` — the engine must never branch on trace *content*.
+
 Run ``python -m repro.analysis.astlint [paths...]`` (default ``src``);
 exit code 1 iff any finding.
 """
@@ -63,6 +74,10 @@ _CANCEL_MODULES = ("repro/core/mis.py", "repro/core/certify.py",
                    "repro/core/bandmap.py", "repro/exact/backend.py",
                    "repro/exact/race.py")
 _CANONICAL_MODULES = ("repro/serve/canon.py", "repro/core/schedule.py")
+_TRACER_MODULES = ("repro/core/mis.py", "repro/core/certify.py",
+                   "repro/core/bandmap.py", "repro/core/conflict.py",
+                   "repro/exact/backend.py", "repro/exact/race.py",
+                   "repro/comap/comap.py")
 _RESULT_MODULE = "repro/core/bandmap.py"
 # SERIAL_VERSION -> sha256(",".join(field names))[:16].  Adding,
 # removing or reordering MappingResult fields requires bumping the
@@ -329,12 +344,70 @@ def _rule_no_wallclock_canonical(tree, rel, out):
                 f"canonical-path module (seed a default_rng instead)"))
 
 
+def _rule_tracer_default_none(tree, rel, out):
+    if not rel.endswith(_TRACER_MODULES):
+        return
+
+    def is_identity_none_check(test: ast.AST) -> bool:
+        return (isinstance(test, ast.Compare)
+                and isinstance(test.left, ast.Name)
+                and test.left.id == "tracer"
+                and len(test.ops) == 1
+                and isinstance(test.ops[0], (ast.Is, ast.IsNot))
+                and len(test.comparators) == 1
+                and isinstance(test.comparators[0], ast.Constant)
+                and test.comparators[0].value is None)
+
+    def mentions_tracer(node: ast.AST) -> bool:
+        return any(isinstance(n, ast.Name) and n.id == "tracer"
+                   for n in ast.walk(node))
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            args = node.args
+            pos = args.args + args.posonlyargs
+            n_required = len(pos) - len(args.defaults)
+            pairs = list(zip(pos[n_required:], args.defaults)) + [
+                (a, d) for a, d in zip(args.kwonlyargs,
+                                       args.kw_defaults)]
+            for a in pos[:n_required]:
+                if a.arg == "tracer":
+                    out.append(AstFinding(
+                        rel, node.lineno, "tracer-default-none",
+                        f"function {node.name!r} takes `tracer` "
+                        f"without a default — engine entry points "
+                        f"must default it to None (NullTracer "
+                        f"contract)"))
+            for a, d in pairs:
+                if a.arg == "tracer" and not (
+                        isinstance(d, ast.Constant)
+                        and d.value is None):
+                    out.append(AstFinding(
+                        rel, node.lineno, "tracer-default-none",
+                        f"function {node.name!r} defaults `tracer` to "
+                        f"something other than None — untraced runs "
+                        f"must stay bit-identical"))
+        tests: list[ast.AST] = []
+        if isinstance(node, (ast.If, ast.While, ast.IfExp,
+                             ast.Assert)):
+            tests.append(node.test)
+        for test in tests:
+            if mentions_tracer(test) and \
+                    not is_identity_none_check(test):
+                out.append(AstFinding(
+                    rel, node.lineno, "tracer-default-none",
+                    "condition references `tracer` beyond the identity "
+                    "None-check — the engine must not branch on trace "
+                    "content"))
+
+
 _RULES = (_rule_mapping_result_ok, _rule_cancel_poll,
           _rule_serial_version_pin, _rule_lock_guarded_state,
-          _rule_no_wallclock_canonical)
+          _rule_no_wallclock_canonical, _rule_tracer_default_none)
 
 RULE_NAMES = ("mapping-result-ok", "cancel-poll", "serial-version-pin",
-              "lock-guarded-state", "no-wallclock-canonical")
+              "lock-guarded-state", "no-wallclock-canonical",
+              "tracer-default-none")
 
 
 # ------------------------------------------------------------------ api

@@ -37,6 +37,7 @@ from repro.core.dfg import DFG
 from repro.core.schedule import ScheduledDFG, mii
 from repro.core.validate import ValidationReport, validate_mapping
 from repro.core.workloads import op_weight
+from repro.obs.trace import live
 
 from .arbiter import ArbiterReport, arbitrate, merge_mappings
 from .regions import Region, partition
@@ -73,7 +74,7 @@ class CoMapResult:
 
 def co_map(dfgs: list[DFG], cgra: CGRAConfig, *, mode: str = "bandmap",
            max_ii: int = 32, min_ii: int | None = None, seed: int = 0,
-           rounds: int = 4, grf_split: bool = True,
+           rounds: int = 4, grf_split: bool = True, tracer=None,
            **map_kw) -> CoMapResult:
     """Co-map ``dfgs`` onto ``cgra``; see the module docstring.
 
@@ -83,8 +84,12 @@ def co_map(dfgs: list[DFG], cgra: CGRAConfig, *, mode: str = "bandmap",
     would pass to `map_dfg`).  ``grf_split`` divides the global
     register file evenly among regions for the local runs (the pooled
     budget is re-checked by the arbiter and the merged replay either
-    way).  Remaining keyword arguments are forwarded to every
-    `map_dfg` call (mis_restarts, certify, row_cache_limit, ...)."""
+    way).  ``tracer`` (default None) records per-region "comap-region"
+    spans, "arbitrate"/"merge-replay" spans and the
+    ``comap.arbitration_retries`` counter; see `repro.obs`.  Remaining
+    keyword arguments are forwarded to every `map_dfg` call
+    (mis_restarts, certify, row_cache_limit, ...)."""
+    trc = live(tracer)
     t0 = _time.perf_counter()
     k = len(dfgs)
     if k == 0:
@@ -107,21 +112,29 @@ def co_map(dfgs: list[DFG], cgra: CGRAConfig, *, mode: str = "bandmap",
         for rnd in range(rounds):
             attempts += 1
             for i in sorted(stale):
-                results[i] = map_dfg(
-                    dfgs[i], cfgs[i], mode=mode, min_ii=ii_star,
-                    max_ii=ii_star, seed=seed + 131 * rnd + 17 * i,
-                    **map_kw)
+                with trc.span("comap-region", region=i, round=rnd,
+                              ii=ii_star) as sp:
+                    results[i] = map_dfg(
+                        dfgs[i], cfgs[i], mode=mode, min_ii=ii_star,
+                        max_ii=ii_star, seed=seed + 131 * rnd + 17 * i,
+                        tracer=tracer, **map_kw)
+                    sp.set(ok=results[i].ok)
             if not all(r is not None and r.ok for r in results):
                 # Some region cannot bind at this common II at all —
                 # re-seeding the others cannot fix that; escalate.
                 break
-            arb = arbitrate(regions, results, cgra)
+            with trc.span("arbitrate", round=rnd, ii=ii_star) as asp:
+                arb = arbitrate(regions, results, cgra)
+                asp.set(ok=arb.ok)
             last_arb = arb
             if not arb.ok:
+                trc.count("comap.arbitration_retries")
                 stale = set(arb.implicated)
                 continue
-            merged_sched, placement = merge_mappings(regions, results)
-            report = validate_mapping(merged_sched, cgra, placement)
+            with trc.span("merge-replay", ii=ii_star):
+                merged_sched, placement = merge_mappings(regions,
+                                                         results)
+                report = validate_mapping(merged_sched, cgra, placement)
             last_report = report
             last_merged = (merged_sched, placement)
             if report.ok:

@@ -14,6 +14,8 @@ import time as _time
 
 import numpy as np
 
+from repro.obs.trace import live
+
 from .certify import IICertificate, certify_ii_infeasible
 from .cgra import CGRAConfig
 from .conflict import (ConflictGraph, Vertex, build_conflict_graph,
@@ -109,7 +111,7 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
             group_move: GroupMoveConfig | bool | None = None,
             backend: str = "portfolio",
             static_prepass: bool = True,
-            cancel=None) -> MappingResult:
+            cancel=None, tracer=None) -> MappingResult:
     """Run the full 4-phase mapping.  Phase 4 (incomplete-mapping
     processing) = MIS restarts with fresh seeds, re-scheduling with jitter
     (ASAP schedules are II-invariant, so jitter supplies the diversity),
@@ -163,7 +165,14 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
     combinations, between harvest rounds, and inside the portfolio's
     iteration loop; a cancelled run returns its best-effort ``ok=False``
     result.  ``cancel=None`` (default) is bit-identical to the
-    flag-less engine."""
+    flag-less engine.
+
+    ``tracer`` (`repro.obs.Tracer`, default None) records the run as a
+    span tree — "map-dfg" at the root, per-phase children (see
+    `repro.obs` for the stable span taxonomy).  Tracing is observation
+    only: a ``tracer=None`` run is bit-identical to a traced one (the
+    NullTracer contract, enforced by the ``tracer-default-none`` AST
+    lint rule)."""
     if backend != "portfolio":
         from repro.exact import exact_map_dfg, race_map_dfg
         if backend == "exact":
@@ -171,7 +180,8 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
                 dfg, cgra, mode=mode, use_grf=use_grf, max_ii=max_ii,
                 min_ii=min_ii, seed=seed, node_budget=certify_budget,
                 bus_pressure=bus_pressure, row_cache_limit=row_cache_limit,
-                max_bus_fanout=max_bus_fanout, cancel=cancel)
+                max_bus_fanout=max_bus_fanout, cancel=cancel,
+                tracer=tracer)
         if backend == "race":
             return race_map_dfg(
                 dfg, cgra, mode=mode, use_grf=use_grf, max_ii=max_ii,
@@ -181,8 +191,30 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
                 n_exact_placements=n_exact_placements,
                 row_cache_limit=row_cache_limit,
                 max_bus_fanout=max_bus_fanout, group_move=group_move,
-                cancel=cancel)
+                cancel=cancel, tracer=tracer)
         raise ValueError(f"unknown mapping backend {backend!r}")
+    with live(tracer).span("map-dfg", mode=mode,
+                           n_ops=len(dfg.ops)) as sp:
+        res = _map_dfg_portfolio(
+            dfg, cgra, mode=mode, use_grf=use_grf, max_ii=max_ii,
+            min_ii=min_ii, mis_restarts=mis_restarts,
+            mis_iters=mis_iters, seed=seed, certify=certify,
+            bus_pressure=bus_pressure, certify_budget=certify_budget,
+            n_exact_placements=n_exact_placements,
+            row_cache_limit=row_cache_limit,
+            max_bus_fanout=max_bus_fanout, group_move=group_move,
+            static_prepass=static_prepass, cancel=cancel, tracer=tracer)
+        sp.set(ok=res.ok, ii=res.ii, attempts=res.attempts)
+        return res
+
+
+def _map_dfg_portfolio(dfg: DFG, cgra: CGRAConfig, *, mode, use_grf,
+                       max_ii, min_ii, mis_restarts, mis_iters, seed,
+                       certify, bus_pressure, certify_budget,
+                       n_exact_placements, row_cache_limit,
+                       max_bus_fanout, group_move, static_prepass,
+                       cancel, tracer=None) -> MappingResult:
+    trc = live(tracer)
     t_start = _time.perf_counter()
     the_mii = mii(dfg, cgra)
     cache_limit = ROW_CACHE_LIMIT if row_cache_limit is None \
@@ -194,10 +226,12 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
     static_floor, static_detail = the_mii, ""
     if static_prepass:
         from repro.analysis.demand import implied_demand_bounds
-        for b in implied_demand_bounds(dfg, cgra,
-                                       max_bus_fanout=max_bus_fanout):
-            if b.min_ii > static_floor:
-                static_floor, static_detail = b.min_ii, b.summary()
+        with trc.span("static-prepass", mii=the_mii) as ssp:
+            for b in implied_demand_bounds(dfg, cgra,
+                                           max_bus_fanout=max_bus_fanout):
+                if b.min_ii > static_floor:
+                    static_floor, static_detail = b.min_ii, b.summary()
+            ssp.set(floor=static_floor)
     attempts = 0
     certificates: list[IICertificate] = []
     last: tuple = (None, None, None, 0, (0, 0))
@@ -216,14 +250,16 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
             if cancel is not None and cancel.is_set():
                 break
             try:
-                sched = schedule_dfg(dfg, cgra, mode=mode, ii=cur_ii,
-                                     max_ii=cur_ii, use_grf=use_grf,
-                                     jitter=jitter, seed=seed,
-                                     max_bus_fanout=max_bus_fanout)
+                with trc.span("schedule", ii=cur_ii, jitter=jitter):
+                    sched = schedule_dfg(dfg, cgra, mode=mode, ii=cur_ii,
+                                         max_ii=cur_ii, use_grf=use_grf,
+                                         jitter=jitter, seed=seed,
+                                         max_bus_fanout=max_bus_fanout)
             except RuntimeError:
                 continue
             cg = build_conflict_graph(sched, cgra,
-                                      bus_pressure=bus_pressure)
+                                      bus_pressure=bus_pressure,
+                                      tracer=tracer)
             n_ops = len(sched.dfg.ops)
             # One unpacked-row cache per conflict graph, shared by the
             # certificate search, the portfolio and the repair retries.
@@ -234,7 +270,8 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
                     cg, sched, cgra, jitter=jitter,
                     node_budget=certify_budget, row_cache=shared_u8,
                     n_placements=n_exact_placements,
-                    row_cache_limit=cache_limit, cancel=cancel)
+                    row_cache_limit=cache_limit, cancel=cancel,
+                    tracer=tracer)
                 if cert is not None:
                     # Proven unbindable: skip the whole portfolio budget
                     # for this (II, jitter) combination.
@@ -250,7 +287,8 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
                     attempts += 1
                     placement = {cg.vertices[i].op: cg.vertices[i]
                                  for i in mis_indices(csp_sol)}
-                    report = validate_mapping(sched, cgra, placement)
+                    with trc.span("validate", ii=cur_ii, source="csp"):
+                        report = validate_mapping(sched, cgra, placement)
                     last = (sched, placement, report, n_ops,
                             (cg.n, cg.n_edges))
                     if report.ok:
@@ -272,14 +310,17 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
             # as any seed covers every op.  Most seeds warm-start from the
             # structure-aware constructive placement; some stay cold.
             base = seed * 1001 + cur_ii * 131 + jitter * 31
-            inits = [constructive_init(cg, sched, cgra, seed=base + k)
-                     if k % 3 != 2 else None for k in range(budget)]
-            attempts += budget
-            op_of = cg.op_of
-            sbts = PortfolioSBTS(cg.bits, inits, seed=base,
-                                 row_cache=shared_u8,
-                                 row_cache_limit=cache_limit,
-                                 op_of=op_of, group_move=group_move)
+            with trc.span("portfolio-init", ii=cur_ii, jitter=jitter,
+                          seeds=budget):
+                inits = [constructive_init(cg, sched, cgra,
+                                           seed=base + k)
+                         if k % 3 != 2 else None for k in range(budget)]
+                attempts += budget
+                op_of = cg.op_of
+                sbts = PortfolioSBTS(cg.bits, inits, seed=base,
+                                     row_cache=shared_u8,
+                                     row_cache_limit=cache_limit,
+                                     op_of=op_of, group_move=group_move)
             # Repair retries reuse the same cache; when the graph was too
             # big for it, row_cache() materialises one lazily so the
             # retries don't each re-unpack n² rows.
@@ -297,7 +338,17 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
                 if cancel is not None and cancel.is_set():
                     break
                 start_it = sbts.it
-                bests = sbts.run(remaining, target=n_ops, cancel=cancel)
+                with trc.span("portfolio", ii=cur_ii, jitter=jitter,
+                              round=rnd) as psp:
+                    bests = sbts.run(remaining, target=n_ops,
+                                     cancel=cancel, tracer=tracer)
+                    best_cov = int(sbts.best_size.max()) if sbts.k \
+                        else 0
+                    psp.set(iters=sbts.it - start_it, best=best_cov,
+                            coverage=best_cov / n_ops if n_ops else 1.0)
+                    trc.gauge("portfolio.best", best_cov)
+                    trc.gauge("portfolio.coverage",
+                              best_cov / n_ops if n_ops else 1.0)
                 remaining -= sbts.it - start_it
                 order = np.argsort(-bests.sum(axis=1), kind="stable")
                 for k in order:
@@ -314,18 +365,22 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
                         # (multi-seed: candidate order is randomised, so
                         # retries differ).
                         rs = base + rnd * 97 + int(k)
-                        if row_cache is None:
-                            row_cache = sbts.row_cache()
-                        for rk in range(6):
-                            fixed = ejection_repair(
-                                cg.bits, sol, cg.op_vertices, op_of,
-                                depth=4, seed=rs * 13 + rk,
-                                row_cache=row_cache)
-                            if int(fixed.sum()) >= n_ops:
+                        with trc.span("repair", ii=cur_ii,
+                                      shortfall=n_ops - size):
+                            if row_cache is None:
+                                # Lazy n² unpack — on 16x16 graphs this
+                                # dominates the first repair's wall.
+                                row_cache = sbts.row_cache()
+                            for rk in range(6):
+                                fixed = ejection_repair(
+                                    cg.bits, sol, cg.op_vertices, op_of,
+                                    depth=4, seed=rs * 13 + rk,
+                                    row_cache=row_cache)
+                                if int(fixed.sum()) >= n_ops:
+                                    sol = fixed
+                                    break
+                            else:
                                 sol = fixed
-                                break
-                        else:
-                            sol = fixed
                         size = int(sol.sum())
                     if size < n_ops:
                         last = (sched, None, None, size,
@@ -333,7 +388,9 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
                         continue
                     placement = {cg.vertices[i].op: cg.vertices[i]
                                  for i in mis_indices(sol)}
-                    report = validate_mapping(sched, cgra, placement)
+                    with trc.span("validate", ii=cur_ii,
+                                  source="portfolio"):
+                        report = validate_mapping(sched, cgra, placement)
                     last = (sched, placement, report, size,
                             (cg.n, cg.n_edges))
                     if report.ok:

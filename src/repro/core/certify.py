@@ -61,6 +61,8 @@ import time as _time
 
 import numpy as np
 
+from repro.obs.trace import live
+
 from .cgra import CGRAConfig
 from .conflict import QUAD, TIN, TOUT, ConflictGraph
 from .dfg import OpKind
@@ -211,7 +213,7 @@ def _search_complete(cg: ConflictGraph, node_budget: int,
                      cgra: CGRAConfig | None = None,
                      n_solutions: int = 1,
                      row_cache_limit: int | None = None,
-                     on_solution=None, cancel=None,
+                     on_solution=None, cancel=None, tracer=None,
                      ) -> tuple[bool | None, list[np.ndarray], int]:
     """Stage 3: exact bounded CSP.  Returns (verdict, placements, nodes):
     verdict False = proven infeasible, True = ``placements`` holds up to
@@ -285,6 +287,10 @@ def _search_complete(cg: ConflictGraph, node_budget: int,
     tb = np.array([float(np.bitwise_count(cg.bits.rows[d]).sum())
                    / max(d.size, 1) for d in doms])
     tb = -0.9 * tb / (tb.max() + 1.0)
+    # Orbit-pruning hits, accumulated locally (one list append per skip
+    # would be tracer traffic inside the node loop; one count at the
+    # end is free) and published as the `certify.orbit_skips` counter.
+    orbit_skips = [0]
 
     def run(sym: tuple | None, budget: int,
             ) -> tuple[bool | None, list[np.ndarray], int]:
@@ -350,6 +356,7 @@ def _search_complete(cg: ConflictGraph, node_budget: int,
                            c_ref if c_ref < 0 or c_ref in used_cols
                            else -2)
                     if key in seen:
+                        orbit_skips[0] += 1
                         continue
                     seen.add(key)
                     if r_ref >= 0:
@@ -394,6 +401,9 @@ def _search_complete(cg: ConflictGraph, node_budget: int,
         # An exhausted (False) or budget-out (None) sweep that still
         # recorded placements is a feasibility witness, not a proof.
         verdict = True
+    trc = live(tracer)
+    trc.count("certify.csp_nodes", spent)
+    trc.count("certify.orbit_skips", orbit_skips[0])
     return verdict, placements, spent
 
 
@@ -403,7 +413,7 @@ def certify_ii_infeasible(cg: ConflictGraph, sched: ScheduledDFG,
                           row_cache: np.ndarray | None = None,
                           n_placements: int = 1,
                           row_cache_limit: int | None = None,
-                          on_solution=None, cancel=None,
+                          on_solution=None, cancel=None, tracer=None,
                           ) -> tuple[IICertificate | None,
                                      list[np.ndarray] | None]:
     """Run the certificate stages against one scheduled DFG.
@@ -420,24 +430,38 @@ def certify_ii_infeasible(cg: ConflictGraph, sched: ScheduledDFG,
     every placement was discarded still certifies the schedule — the
     certificate detail records that the claim covers callback-accepted
     placements, not just conflict-free ones."""
-    t0 = _time.perf_counter()
-    detail = _resource_count_bound(sched, cgra)
-    if detail is not None:
-        return IICertificate(sched.ii, jitter, "resource-count", detail,
-                             0, _time.perf_counter() - t0), None
-    detail = _clique_merge_bound(cg)
-    if detail is not None:
-        return IICertificate(sched.ii, jitter, "clique-merge", detail,
-                             0, _time.perf_counter() - t0), None
-    verdict, placements, nodes = _search_complete(
-        cg, node_budget, row_cache=row_cache, cgra=cgra,
-        n_solutions=n_placements, row_cache_limit=row_cache_limit,
-        on_solution=on_solution, cancel=cancel)
-    if verdict is False:
-        what = "validator-accepted" if on_solution is not None \
-            else "complete independent"
-        detail = (f"exhaustive search: no {what} placement "
-                  f"of {len(cg.op_vertices)} ops over {cg.n} candidates")
-        return IICertificate(sched.ii, jitter, "exhausted", detail,
-                             nodes, _time.perf_counter() - t0), None
-    return None, placements
+    trc = live(tracer)
+    with trc.span("certify", ii=sched.ii, jitter=jitter,
+                  n_ops=len(cg.op_vertices), n_vertices=cg.n) as sp:
+        t0 = _time.perf_counter()
+        detail = _resource_count_bound(sched, cgra)
+        if detail is not None:
+            sp.set(stage="resource-count", nodes=0)
+            return IICertificate(sched.ii, jitter, "resource-count",
+                                 detail, 0,
+                                 _time.perf_counter() - t0), None
+        detail = _clique_merge_bound(cg)
+        if detail is not None:
+            sp.set(stage="clique-merge", nodes=0)
+            return IICertificate(sched.ii, jitter, "clique-merge",
+                                 detail, 0,
+                                 _time.perf_counter() - t0), None
+        skips0 = trc.counter_value("certify.orbit_skips")
+        verdict, placements, nodes = _search_complete(
+            cg, node_budget, row_cache=row_cache, cgra=cgra,
+            n_solutions=n_placements, row_cache_limit=row_cache_limit,
+            on_solution=on_solution, cancel=cancel, tracer=tracer)
+        sp.set(nodes=nodes,
+               orbit_skips=trc.counter_value("certify.orbit_skips")
+               - skips0)
+        if verdict is False:
+            what = "validator-accepted" if on_solution is not None \
+                else "complete independent"
+            detail = (f"exhaustive search: no {what} placement "
+                      f"of {len(cg.op_vertices)} ops over "
+                      f"{cg.n} candidates")
+            sp.set(stage="exhausted")
+            return IICertificate(sched.ii, jitter, "exhausted", detail,
+                                 nodes, _time.perf_counter() - t0), None
+        sp.set(stage="open" if verdict is None else "placed")
+        return None, placements

@@ -146,7 +146,8 @@ def _dep_ok(prod: Vertex, cons: Vertex) -> bool:
 
 def build_conflict_graph(sched: ScheduledDFG, cgra: CGRAConfig,
                          use_kernel: bool | str = False,
-                         bus_pressure: bool = False) -> ConflictGraph:
+                         bus_pressure: bool = False,
+                         tracer=None) -> ConflictGraph:
     """Build the mixed conflict graph.  With ``bus_pressure=False``
     (default) the adjacency is byte-identical to the seed formulation
     (`dense_conflicts_python` + `_dep_ok`); ``bus_pressure=True``
@@ -159,7 +160,23 @@ def build_conflict_graph(sched: ScheduledDFG, cgra: CGRAConfig,
     oracle (dense ref + pack), "packed-pallas" = the packed-word Pallas
     kernel whose uint64 rows feed `BitsetGraph` directly — the TPU
     offload path with no python pack step (requires a TPU backend; the
-    interpret-mode equivalence lives in tests/test_kernels.py)."""
+    interpret-mode equivalence lives in tests/test_kernels.py).
+
+    ``tracer`` (default None) records the build as a "conflict-build"
+    span; the edge popcount for the span attrs is only paid on a live
+    tracer."""
+    from repro.obs.trace import live
+    with live(tracer).span("conflict-build", ii=sched.ii) as sp:
+        cg = _build_conflict_graph(sched, cgra, use_kernel, bus_pressure)
+        if tracer is not None:
+            sp.set(n_vertices=cg.n,
+                   n_edges=int(np.bitwise_count(cg.bits.rows).sum()) // 2)
+        return cg
+
+
+def _build_conflict_graph(sched: ScheduledDFG, cgra: CGRAConfig,
+                          use_kernel: bool | str = False,
+                          bus_pressure: bool = False) -> ConflictGraph:
     dfg, ii = sched.dfg, sched.ii
     vertices: list[Vertex] = []
     op_vertices: dict[int, list[int]] = {}

@@ -194,7 +194,7 @@ class PortfolioSBTS:
         return self._u8[v] if self._u8 is not None else self.g.row_u8(v)
 
     def run(self, max_iters: int, target: int | None = None,
-            cancel=None) -> np.ndarray:
+            cancel=None, tracer=None) -> np.ndarray:
         """Advance all seeds up to ``max_iters`` iterations each (an
         iteration is a full (1,0) add sweep or one (1,1) swap, matching
         the single-trajectory SBTS accounting); stop early when any
@@ -206,6 +206,11 @@ class PortfolioSBTS:
         and returns the bests so far.  ``cancel=None`` leaves the
         trajectories bit-identical to the flag-less engine (the polling
         never touches the RNG streams)."""
+        # Per-super-iteration counter handle; the NullCounter default
+        # keeps the untraced loop at one no-op call per [K, n] sweep and
+        # never touches the RNG streams either way.
+        from repro.obs.trace import live
+        iters_counter = live(tracer).counter("portfolio.iters")
         if self.g.n == 0 or self.k == 0:
             return self.best
         if target is not None and (self.best_size >= target).any():
@@ -215,6 +220,7 @@ class PortfolioSBTS:
             if cancel is not None and cancel.is_set():
                 break
             self.it += 1
+            iters_counter.inc()
             it = self.it
             # Periodic group-move kick: spend this iteration ejecting and
             # atomically re-placing a blocking cluster per stalled seed

@@ -64,6 +64,7 @@ from repro.core.dfg import DFG
 from repro.core.mis import ROW_CACHE_LIMIT, mis_indices
 from repro.core.schedule import mii, schedule_dfg
 from repro.core.validate import validate_mapping
+from repro.obs.trace import live
 
 from .hall import hall_pressure_edges
 
@@ -95,12 +96,13 @@ def exact_map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
                   bus_pressure: bool = True, hall: bool = True,
                   max_bus_fanout: int | None = None,
                   row_cache_limit: int | None = None,
-                  cancel=None) -> MappingResult:
+                  cancel=None, tracer=None) -> MappingResult:
     """Prove the engine-optimal II (or certified infeasibility) for one
     DFG — see the module docstring for the exact claims.  The signature
     mirrors `map_dfg`'s schedule-side knobs so the race driver can hand
     both backends the same problem; ``hall`` gates the joint bus-demand
     bound (on by default — it only ever strengthens UNSAT proofs)."""
+    trc = live(tracer)
     t_start = _time.perf_counter()
     the_mii = mii(dfg, cgra)
     cache_limit = ROW_CACHE_LIMIT if row_cache_limit is None \
@@ -127,7 +129,8 @@ def exact_map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
                 # engine's family), not unknown.
                 continue
             cg = build_conflict_graph(sched, cgra,
-                                      bus_pressure=bus_pressure)
+                                      bus_pressure=bus_pressure,
+                                      tracer=tracer)
             if hall:
                 hall_pressure_edges(cg.bits, cg.vertices,
                                     cg.op_vertices, sched, cgra)
@@ -135,11 +138,19 @@ def exact_map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
             shared_u8 = cg.bits.rows_u8(np.arange(cg.n)) \
                 if 0 < cg.n * cg.n <= cache_limit else None
             sink = _ValidateSink(sched, cg, cgra)
-            cert, _ = certify_ii_infeasible(
-                cg, sched, cgra, jitter=jitter,
-                node_budget=node_budget, row_cache=shared_u8,
-                row_cache_limit=cache_limit, on_solution=sink,
-                cancel=cancel)
+            with trc.span("exact-csp", ii=cur_ii, jitter=jitter,
+                          n_ops=n_ops) as xsp:
+                cert, _ = certify_ii_infeasible(
+                    cg, sched, cgra, jitter=jitter,
+                    node_budget=node_budget, row_cache=shared_u8,
+                    row_cache_limit=cache_limit, on_solution=sink,
+                    cancel=cancel, tracer=tracer)
+                xsp.set(validations=sink.tried,
+                        verdict="sat" if sink.accepted is not None
+                        else "unsat" if cert is not None else "unknown")
+                if cert is not None:
+                    xsp.set(nodes=cert.nodes)
+            trc.count("exact.validations", sink.tried)
             attempts += sink.tried
             last = (sched, n_ops, (cg.n, cg.n_edges))
             if sink.accepted is not None:

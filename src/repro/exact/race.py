@@ -31,12 +31,14 @@ are tagged ``backend="race:exact"`` / ``"race:portfolio"``.
 from __future__ import annotations
 
 import dataclasses
+import time as _time
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 
 from repro.core.bandmap import MappingResult
 from repro.core.cancel import CancelToken
 from repro.core.cgra import CGRAConfig
 from repro.core.dfg import DFG
+from repro.obs.trace import live
 
 from .backend import exact_map_dfg
 
@@ -63,7 +65,7 @@ def race_map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
                  max_bus_fanout: int | None = None,
                  group_move=None,
                  exact_node_budget: int | None = None,
-                 cancel=None) -> MappingResult:
+                 cancel=None, tracer=None) -> MappingResult:
     """Race the exact backend against the portfolio (module docstring).
 
     Portfolio knobs are `map_dfg`'s; ``exact_node_budget`` is the
@@ -71,32 +73,50 @@ def race_map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
     ``certify_budget``).  Both sides run under the same ``seed``, so
     they explore the same deterministic schedule family — which is what
     makes an exact UNSAT binding on the portfolio side's schedules too.
-    ``cancel`` cancels the whole race."""
+    ``cancel`` cancels the whole race.
+
+    ``tracer`` records a "race" span (attrs: ``winner``,
+    ``cancel_latency_s`` = cancel-request→loser-exit wall, and — when
+    the loser is the portfolio — ``loser_iters_after_cancel``, the
+    portfolio iterations the loser spent *after* the cancel request;
+    the engine's poll-at-iteration-top contract bounds it at 1) plus
+    one "race-side" span per side.  Both sides share the tracer: the
+    span records carry thread ids, so the export lays them out as
+    separate Perfetto tracks."""
     from repro.core.bandmap import map_dfg
 
+    trc = live(tracer)
     tok_exact = CancelToken(parent=cancel)
     tok_port = CancelToken(parent=cancel)
 
     def run_exact() -> MappingResult:
-        return exact_map_dfg(
-            dfg, cgra, mode=mode, use_grf=use_grf, max_ii=max_ii,
-            min_ii=min_ii, seed=seed,
-            node_budget=exact_node_budget if exact_node_budget
-            is not None else certify_budget,
-            bus_pressure=bus_pressure, max_bus_fanout=max_bus_fanout,
-            row_cache_limit=row_cache_limit, cancel=tok_exact)
+        with trc.span("race-side", side="exact") as sp:
+            res = exact_map_dfg(
+                dfg, cgra, mode=mode, use_grf=use_grf, max_ii=max_ii,
+                min_ii=min_ii, seed=seed,
+                node_budget=exact_node_budget if exact_node_budget
+                is not None else certify_budget,
+                bus_pressure=bus_pressure, max_bus_fanout=max_bus_fanout,
+                row_cache_limit=row_cache_limit, cancel=tok_exact,
+                tracer=tracer)
+            sp.set(ok=res.ok, wall_s=res.wall_s)
+            return res
 
     def run_portfolio() -> MappingResult:
-        return map_dfg(
-            dfg, cgra, mode=mode, use_grf=use_grf, max_ii=max_ii,
-            min_ii=min_ii, mis_restarts=mis_restarts,
-            mis_iters=mis_iters, seed=seed, certify=certify,
-            bus_pressure=bus_pressure, certify_budget=certify_budget,
-            n_exact_placements=n_exact_placements,
-            row_cache_limit=row_cache_limit,
-            max_bus_fanout=max_bus_fanout, group_move=group_move,
-            cancel=tok_port)
+        with trc.span("race-side", side="portfolio") as sp:
+            res = map_dfg(
+                dfg, cgra, mode=mode, use_grf=use_grf, max_ii=max_ii,
+                min_ii=min_ii, mis_restarts=mis_restarts,
+                mis_iters=mis_iters, seed=seed, certify=certify,
+                bus_pressure=bus_pressure, certify_budget=certify_budget,
+                n_exact_placements=n_exact_placements,
+                row_cache_limit=row_cache_limit,
+                max_bus_fanout=max_bus_fanout, group_move=group_move,
+                cancel=tok_port, tracer=tracer)
+            sp.set(ok=res.ok, wall_s=res.wall_s)
+            return res
 
+    rsp = trc.span("race", mode=mode)
     pool = ThreadPoolExecutor(max_workers=2)
     try:
         futs = {pool.submit(run_exact): "exact",
@@ -120,19 +140,48 @@ def race_map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
                 held[side] = res
         # First sound answer in hand (or no side can produce one):
         # stop the rival — it polls the token within a bounded number
-        # of iterations/nodes.
+        # of iterations/nodes.  Snapshot the portfolio-iteration counter
+        # *before* requesting the cancel, so the loser's post-cancel
+        # work is the counter delta at its exit.
+        iters_at_cancel = trc.counter_value("portfolio.iters")
+        t_cancel = _time.perf_counter()
         tok_exact.cancel()
         tok_port.cancel()
+        # Drain the loser (the original code let pool.shutdown absorb
+        # it, which is exactly why its cancel wall was invisible):
+        # record cancel-request→exit latency per still-pending side.
+        while pending:
+            done, pending = wait(pending, return_when=FIRST_COMPLETED)
+            t_exit = _time.perf_counter()
+            for fut in done:
+                side = futs[fut]
+                try:
+                    res = fut.result()
+                except Exception as exc:
+                    errors[side] = exc
+                else:
+                    held.setdefault(side, res)
+                if winner is not None and side != winner[0]:
+                    rsp.set(loser=side,
+                            cancel_latency_s=t_exit - t_cancel)
+                    if side == "portfolio":
+                        rsp.set(loser_iters_after_cancel=int(
+                            trc.counter_value("portfolio.iters")
+                            - iters_at_cancel))
     finally:
         pool.shutdown(wait=True)
-    if winner is not None:
-        side, res = winner
-        return dataclasses.replace(res, backend=f"race:{side}")
-    # No sound answer: prefer the portfolio's best-effort failure (it
-    # carries the partial-coverage diagnostics), then the prover's.
-    for side in ("portfolio", "exact"):
-        if side in held:
-            return dataclasses.replace(held[side],
-                                       backend=f"race:{side}")
-    raise errors["portfolio"] if "portfolio" in errors \
-        else errors["exact"]
+    with rsp:
+        if winner is not None:
+            side, res = winner
+            rsp.set(winner=side)
+            return dataclasses.replace(res, backend=f"race:{side}")
+        # No sound answer: prefer the portfolio's best-effort failure
+        # (it carries the partial-coverage diagnostics), then the
+        # prover's.
+        rsp.set(winner="none")
+        for side in ("portfolio", "exact"):
+            if side in held:
+                return dataclasses.replace(held[side],
+                                           backend=f"race:{side}")
+        raise errors["portfolio"] if "portfolio" in errors \
+            else errors["exact"]

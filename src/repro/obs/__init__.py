@@ -1,0 +1,86 @@
+"""Observability layer: spans over every mapping phase, one metrics store.
+
+Three modules:
+
+- `trace` — `Tracer` (nestable spans on the monotonic clock, structured
+  attributes, counters) and `NullTracer` / `live()` — the ``tracer=None``
+  contract that keeps untraced engine runs bit-identical and
+  allocation-free.
+- `registry` — `MetricsRegistry`: counters, gauges and histograms
+  (p50/p95/p99) behind one lock; the backing store for
+  `serve.MappingService.metrics()`.
+- `export` — plain-JSON dump and Chrome trace-event serialization; a
+  traced `map_dfg` run opens directly in Perfetto / chrome://tracing.
+
+Span taxonomy (STABLE PUBLIC VOCABULARY)
+----------------------------------------
+
+These phase names are an interface: `benchmarks/bench_mis.py` records
+per-row phase breakdowns keyed on them and `check_regression.py` gates
+counters derived from traced runs, so renaming one is a breaking change
+to the bench baseline.  The engine emits:
+
+===============  =====================================================
+span name        emitted by / attributes
+===============  =====================================================
+``map-dfg``      `core.bandmap.map_dfg` root span — ``mode``, ``n_ops``
+``static-prepass``  demand-bound II floor pass — ``floor``, ``skipped``
+``schedule``     per-(II, jitter) modulo schedule — ``ii``, ``jitter``
+``conflict-build``  `conflict.build_conflict_graph` — ``n_vertices``,
+                 ``n_edges``
+``certify``      `certify.certify_ii_infeasible` — ``ii``, ``jitter``,
+                 ``stage``, ``nodes``, ``orbit_skips``
+``portfolio-init``  constructive warm-starts + `PortfolioSBTS` build
+                 (on big graphs this is the dominant pre-search cost) —
+                 ``ii``, ``jitter``, ``seeds``
+``portfolio``    one `PortfolioSBTS` harvest round — ``ii``, ``round``,
+                 ``coverage``, ``best``
+``repair``       ejection-chain repair of a near-complete solution
+                 (includes the lazy row-cache unpack) — ``shortfall``
+``validate``     `validate_mapping` replay of a candidate solution
+``exact-csp``    `exact.backend` per-(II, jitter) complete search —
+                 ``ii``, ``jitter``, ``verdict``, ``nodes``
+``race``         `exact.race` arbitration — ``winner``,
+                 ``cancel_latency_s``, ``loser_iters_after_cancel``
+``race-side``    one side of the race — ``side``, ``wall_s``
+``comap-region``  `comap.co_map` per-region mapping — ``region``,
+                 ``round``, ``ii``
+``arbitrate``    cross-region bus arbitration — ``retries``
+``merge-replay``  merged-binding validation in `co_map`
+===============  =====================================================
+
+Counters (deterministic, gated by ``check_regression.py``):
+``portfolio.iters``, ``certify.csp_nodes``, ``certify.orbit_skips``,
+``exact.validations``, ``comap.arbitration_retries``.
+Gauges: ``portfolio.coverage``, ``portfolio.best``, serve's
+``queue_depth``.
+
+Tracer-threading rule (for future engine code)
+----------------------------------------------
+
+Every engine entry point takes ``tracer=None`` (keyword-only), converts
+it exactly once via ``live(tracer)``, and passes the live handle down.
+Code may check ``tracer is None`` / ``is not None`` but must NEVER
+branch on trace *content* (span timings, counter values) — tracing is
+observation only, and the ``tracer-default-none`` rule in
+`repro.analysis.astlint` enforces both halves on the engine modules.
+"""
+
+from .registry import NULL_COUNTER, Counter, MetricsRegistry, NullCounter
+from .trace import NULL_TRACER, NullTracer, SpanRecord, Tracer, live
+from .export import (from_json, to_chrome_trace, to_json,
+                     write_chrome_trace, write_json)
+
+#: The stable span-name vocabulary documented above.
+PHASES = (
+    "map-dfg", "static-prepass", "schedule", "conflict-build", "certify",
+    "portfolio-init", "portfolio", "repair", "validate", "exact-csp",
+    "race", "race-side", "comap-region", "arbitrate", "merge-replay",
+)
+
+__all__ = [
+    "Counter", "MetricsRegistry", "NullCounter", "NULL_COUNTER",
+    "Tracer", "NullTracer", "NULL_TRACER", "SpanRecord", "live",
+    "to_json", "from_json", "to_chrome_trace", "write_chrome_trace",
+    "write_json", "PHASES",
+]

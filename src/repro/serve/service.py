@@ -22,14 +22,11 @@ hit sources, throughput — which `launch/serve.py`,
 
 from __future__ import annotations
 
-import threading
 import time as _time
-from collections import Counter
-
-import numpy as np
 
 from repro.core.cgra import CGRAConfig
 from repro.core.dfg import DFG
+from repro.obs.registry import MetricsRegistry
 
 from .cache import MappingCache
 from .scheduler import MapRequest, RequestScheduler, ServeOutcome
@@ -42,30 +39,26 @@ class MappingService:
     in-memory (benchmarks, tests); pass `DEFAULT_ART_DIR` (or any path)
     to persist mappings across processes."""
 
-    # Shared mutable metrics state: concurrent `map_batch` callers (the
-    # facade is the natural thing to share across server threads) must
-    # not interleave counter updates.  The tuple is the contract the
-    # `lock-guarded-state` astlint rule enforces: these attributes are
-    # only mutated under ``self._lock``.
-    _lock_guarded = ("_latencies", "_sources", "_requests", "_hits",
-                     "_ok", "_batch_wall_s")
+    # Shared mutable metrics state lives in one `obs.MetricsRegistry`:
+    # concurrent `map_batch` callers (the facade is the natural thing
+    # to share across server threads) publish each batch as a single
+    # `record()` — one lock acquisition, no interleaved counter
+    # updates.  The lock-guarded contract the hand-rolled counters used
+    # to carry now lives on the registry itself (its ``_lock_guarded``
+    # tuple, enforced by the same astlint rule).
 
     def __init__(self, *, cache: MappingCache | None = None,
                  capacity: int = 256, art_dir: str | None = None,
                  max_workers: int | None = None,
-                 base_seed: int = 0) -> None:
+                 base_seed: int = 0,
+                 registry: MetricsRegistry | None = None) -> None:
         self.cache = cache if cache is not None else \
             MappingCache(capacity=capacity, art_dir=art_dir)
         self.scheduler = RequestScheduler(self.cache,
                                           max_workers=max_workers,
                                           base_seed=base_seed)
-        self._lock = threading.Lock()
-        self._latencies: list[float] = []
-        self._sources: Counter[str] = Counter()
-        self._requests = 0
-        self._hits = 0
-        self._ok = 0
-        self._batch_wall_s = 0.0
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
 
     # -------------------------------------------------------------- api
     def map(self, dfg: DFG, cgra: CGRAConfig, *, deadline: float = 0.0,
@@ -80,37 +73,57 @@ class MappingService:
         t0 = _time.perf_counter()
         outcomes = self.scheduler.run(requests)
         wall = _time.perf_counter() - t0
-        with self._lock:
-            self._batch_wall_s += wall
-            for out in outcomes:
-                self._requests += 1
-                self._hits += int(out.hit)
-                self._ok += int(out.result is not None
-                                and out.result.ok)
-                self._sources[out.source] += 1
-                self._latencies.append(out.wall_s)
+        counters: dict = {"requests": len(outcomes),
+                          "batch_wall_s": wall}
+        hits = ok = 0
+        for out in outcomes:
+            hits += int(out.hit)
+            ok += int(out.result is not None and out.result.ok)
+            key = f"source.{out.source}"
+            counters[key] = counters.get(key, 0) + 1
+        counters["hits"] = hits
+        counters["ok"] = ok
+        # One batched record = one lock acquisition = one consistent
+        # snapshot boundary for a concurrent metrics() reader.  The
+        # queue-depth gauge samples admission pressure: how many
+        # requests this batch put in front of the scheduler.
+        self.registry.record(
+            counters=counters,
+            gauges={"queue_depth": len(requests)},
+            observations={"latency_s": [o.wall_s for o in outcomes]})
         return outcomes
 
     # ---------------------------------------------------------- metrics
-    def metrics(self) -> dict:
-        with self._lock:         # consistent snapshot vs map_batch
-            lat = np.asarray(self._latencies, dtype=float)
-            n_req, n_ok, n_hits = self._requests, self._ok, self._hits
-            wall = self._batch_wall_s
-            sources = dict(self._sources)
-        p50, p95 = (float(np.percentile(lat, 50)),
-                    float(np.percentile(lat, 95))) if lat.size else (0., 0.)
+    def metrics(self, reset: bool = False) -> dict:
+        """Running metrics snapshot.  ``reset=True`` atomically clears
+        the registry after reading, so a nightly scrape can report
+        interval deltas without clobbering a concurrent reader's view
+        mid-snapshot; the default keeps cumulative totals (cache stats
+        are lifetime either way)."""
+        snap = self.registry.snapshot(reset=reset)
+        c, h = snap["counters"], snap["histograms"]
+        lat = h.get("latency_s", {})
+        n_req = c.get("requests", 0)
+        n_hits = c.get("hits", 0)
+        wall = c.get("batch_wall_s", 0.0)
+        sources = {k[len("source."):]: v for k, v in c.items()
+                   if k.startswith("source.")}
+        qd = snap["gauges"].get("queue_depth",
+                                dict(last=0, min=0, max=0, count=0,
+                                     mean=0.0))
         return dict(
             requests=n_req,
-            ok=n_ok,
+            ok=c.get("ok", 0),
             hits=n_hits,
             hit_rate=round(n_hits / n_req, 4) if n_req else 0.0,
-            p50_ms=round(p50 * 1e3, 3),
-            p95_ms=round(p95 * 1e3, 3),
+            p50_ms=round(lat.get("p50", 0.0) * 1e3, 3),
+            p95_ms=round(lat.get("p95", 0.0) * 1e3, 3),
+            p99_ms=round(lat.get("p99", 0.0) * 1e3, 3),
             wall_s=round(wall, 3),
             throughput_rps=round(n_req / wall, 2) if wall else 0.0,
             sources=sources,
             static_rejects=sources.get("static_reject", 0),
+            queue_depth=qd,
             cache=self.cache.stats.as_dict(),
         )
 
@@ -119,4 +132,5 @@ class MappingService:
         return (f"serve: {m['requests']} requests "
                 f"({m['ok']} ok), hit-rate {m['hit_rate']:.0%}, "
                 f"p50 {m['p50_ms']:.1f} ms, p95 {m['p95_ms']:.1f} ms, "
+                f"p99 {m['p99_ms']:.1f} ms, "
                 f"{m['throughput_rps']:.1f} req/s")

@@ -64,6 +64,24 @@ import numpy as np
 def sig(d):
     return np.random.permutation(3)
 """, "src/repro/core/schedule.py"),
+    ("tracer-non-none-default", "tracer-default-none", """
+def map_it(dfg, tracer=NULL_TRACER):
+    return run(dfg, tracer)
+""", "src/repro/core/bandmap.py"),
+    ("tracer-no-default", "tracer-default-none", """
+def run(self, max_iters, *, tracer):
+    return tracer
+""", "src/repro/core/mis.py"),
+    ("tracer-content-branch", "tracer-default-none", """
+def f(tracer=None):
+    if tracer is not None and tracer.counter_value("x") > 10:
+        return early()
+""", "src/repro/exact/race.py"),
+    ("tracer-truthiness-branch", "tracer-default-none", """
+def f(tracer=None):
+    if tracer:
+        tracer.count("x")
+""", "src/repro/comap/comap.py"),
 ]
 
 # Compliant twin under the SAME path scope: must produce no findings.
@@ -104,6 +122,20 @@ import numpy as np
 def sig(d):
     return np.random.default_rng(0).permutation(3)
 """, "src/repro/core/schedule.py"),
+    ("tracer-identity-check-ok", """
+def f(dfg, *, tracer=None):
+    trc = live(tracer)
+    if tracer is not None:
+        trc.span("conflict-build")
+    if tracer is None:
+        return fast(dfg)
+    return slow(dfg, trc)
+""", "src/repro/core/conflict.py"),
+    ("tracer-rule-scoped-to-engine", """
+def plot(tracer):
+    if tracer:
+        draw(tracer.finished)
+""", "src/repro/analysis/plots.py"),
 ]
 
 
@@ -124,7 +156,7 @@ def test_compliant_twin_is_clean(name, src, rel):
 
 def test_all_rules_covered():
     """The seeded-violation fixtures exercise every named rule."""
-    assert len(RULE_NAMES) >= 5
+    assert len(RULE_NAMES) >= 6
     assert {v[1] for v in VIOLATIONS} == set(RULE_NAMES)
 
 

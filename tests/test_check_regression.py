@@ -1,7 +1,9 @@
 """The bench-regression gate (`benchmarks/check_regression.py`) must
 fail loudly when a whole baseline section vanishes from the fresh JSON
 (a benchmark that silently stopped running), while retired individual
-rows stay informational."""
+rows stay informational.  Rows carrying ``counters`` (the traced
+kernel_table) are additionally gated on each deterministic counter —
+tighter factor, no machine-speed scaling, missing counter = failure."""
 
 import os
 import sys
@@ -11,8 +13,11 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks.check_regression import SECTIONS, check  # noqa: E402
 
 
-def _bench(wall=1.0, sections=("kernel_table",), kernels=("C2K6",)):
-    return {s: [dict(kernel=k, mode="bandmap", wall_s=wall)
+def _bench(wall=1.0, sections=("kernel_table",), kernels=("C2K6",),
+           counters=None):
+    return {s: [dict(kernel=k, mode="bandmap", wall_s=wall,
+                     **({"counters": dict(counters)} if counters
+                        else {}))
                 for k in kernels] for s in sections}
 
 
@@ -65,3 +70,53 @@ def test_group_move_section_is_gated():
     base = _bench(sections=("group_move",))
     fresh = _bench(sections=("group_move",), wall=9.0)
     assert check(base, fresh)
+
+
+# -------------------------------------------------------- counter gate
+
+def test_counter_within_budget_passes():
+    base = _bench(counters={"certify_csp_nodes": 1000})
+    fresh = _bench(counters={"certify_csp_nodes": 1200})   # < 1.25x
+    assert check(base, fresh) == []
+
+
+def test_counter_regression_fails():
+    base = _bench(counters={"certify_csp_nodes": 1000,
+                            "portfolio_iters": 800})
+    fresh = _bench(counters={"certify_csp_nodes": 2000,
+                             "portfolio_iters": 800})
+    failures = check(base, fresh)
+    assert len(failures) == 1
+    assert "certify_csp_nodes" in failures[0]
+    assert "counter budget" in failures[0]
+
+
+def test_missing_counter_fails():
+    base = _bench(counters={"certify_csp_nodes": 1000,
+                            "portfolio_iters": 800})
+    fresh = _bench(counters={"certify_csp_nodes": 1000})
+    failures = check(base, fresh)
+    assert len(failures) == 1
+    assert "portfolio_iters" in failures[0]
+    assert "instrumentation" in failures[0]
+
+
+def test_sub_floor_counter_jump_passes():
+    # 10 -> 40 CSP nodes is noise-free but meaningless; the absolute
+    # floor (default 500) absorbs it.
+    base = _bench(counters={"certify_csp_nodes": 10})
+    fresh = _bench(counters={"certify_csp_nodes": 40})
+    assert check(base, fresh) == []
+    # ...but past the floor the tighter factor applies, unscaled by
+    # machine speed.
+    base["engine_speedup"] = dict(seed_solve_s=1.0)
+    slow = _bench(counters={"certify_csp_nodes": 700})
+    slow["engine_speedup"] = dict(seed_solve_s=4.0)
+    assert check(base, slow)  # 700 > 1.25 * max(10, 500) despite scale
+
+
+def test_counterless_rows_skip_the_gate():
+    base = _bench(counters={"certify_csp_nodes": 1000})
+    fresh = _bench()   # fresh row dropped its counters dict entirely
+    failures = check(base, fresh)
+    assert failures and "instrumentation" in failures[0]

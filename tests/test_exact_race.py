@@ -201,3 +201,29 @@ def test_both_sides_crashed_raises(monkeypatch):
     from repro.exact import race_map_dfg
     with pytest.raises(RuntimeError):
         race_map_dfg(make_cnkm(2, 6), CGRA, mode="busmap")
+
+
+def test_traced_race_bounds_loser_iterations_after_cancel():
+    """The traced race records the cancel-request -> loser-exit latency
+    and the loser's iterations after the cancel; the poll-at-top
+    contract bounds the latter at <= 1 on the real engine.  Forced
+    winner: certification off on an infeasible instance means only the
+    prover can be sound, so the portfolio is always the loser."""
+    from repro.obs import Tracer
+
+    tr = Tracer()
+    r = map_dfg(make_cnkm(5, 5), CGRA, mode="busmap", max_ii=2,
+                backend="race", certify=False, seed=7, tracer=tr)
+    assert r.backend == "race:exact" and not r.ok
+    (race_rec,) = [s for s in tr.finished if s.name == "race"]
+    assert race_rec.attrs["winner"] == "exact"
+    assert race_rec.attrs["loser"] == "portfolio"
+    assert race_rec.attrs["cancel_latency_s"] >= 0.0
+    assert race_rec.attrs["loser_iters_after_cancel"] <= 1
+    sides = {s.attrs["side"]: s for s in tr.finished
+             if s.name == "race-side"}
+    assert set(sides) == {"exact", "portfolio"}
+    assert sides["exact"].attrs["ok"] is False
+    # Both sides ran nested engine pipelines on the shared tracer.
+    names = {s.name for s in tr.finished}
+    assert "exact-csp" in names and "conflict-build" in names

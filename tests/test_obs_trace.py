@@ -1,0 +1,264 @@
+"""Observability layer: span mechanics, the NullTracer bit-identity
+contract, export round-trips, and the metrics registry.
+
+The load-bearing test here is the bit-identity sweep: `map_dfg` with a
+recording `Tracer` must return exactly the same (ok, II, routing-PE,
+attempts) as with ``tracer=None`` on every paper kernel — tracing is
+observation only, never a perturbation of the search.  The slow BusMap
+stragglers run under ``-m slow``, matching test_golden_results.
+"""
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import PAPER_KERNELS, cnkm_name, make_cnkm, map_dfg
+from repro.core.cgra import CGRAConfig
+from repro.obs import (NULL_TRACER, PHASES, MetricsRegistry, NullTracer,
+                       SpanRecord, Tracer, from_json, live,
+                       to_chrome_trace, to_json)
+from repro.obs.trace import NULL_SPAN
+
+
+# ---------------------------------------------------------------- spans
+
+def test_span_nesting_parent_and_depth():
+    tr = Tracer()
+    with tr.span("outer", ii=2) as outer:
+        with tr.span("inner", jitter=1) as inner:
+            inner.set(nodes=7)
+        with tr.span("inner2"):
+            pass
+    recs = {r.name: r for r in tr.finished}
+    assert set(recs) == {"outer", "inner", "inner2"}
+    assert recs["outer"].parent == -1 and recs["outer"].depth == 0
+    assert recs["inner"].parent == recs["outer"].sid
+    assert recs["inner"].depth == 1
+    assert recs["inner2"].parent == recs["outer"].sid
+    assert recs["inner"].attrs == {"jitter": 1, "nodes": 7}
+    assert recs["outer"].attrs == {"ii": 2}
+    # Children finish before the parent; times are monotone and nested.
+    assert recs["inner"].t1 <= recs["outer"].t1
+    assert recs["outer"].t0 <= recs["inner"].t0
+    assert all(r.dur_s >= 0 for r in tr.finished)
+    assert outer.sid != inner.sid
+
+
+def test_span_records_error_attr_on_exception():
+    tr = Tracer()
+    with pytest.raises(ValueError):
+        with tr.span("boom"):
+            raise ValueError("nope")
+    (rec,) = tr.finished
+    assert rec.attrs["error"] == "ValueError"
+
+
+def test_span_out_of_order_exit_tolerated():
+    tr = Tracer()
+    outer = tr.span("outer")
+    tr.span("inner")  # never explicitly closed
+    outer.__exit__(None, None, None)  # closes through the stack
+    names = [r.name for r in tr.finished]
+    assert names == ["outer"]
+    # A fresh span after the unwind starts at the top level again.
+    with tr.span("next"):
+        pass
+    assert tr.finished[-1].parent == -1
+
+
+def test_spans_from_two_threads_keep_separate_stacks():
+    tr = Tracer()
+
+    def work(tag):
+        with tr.span("side", side=tag):
+            with tr.span("leaf", side=tag):
+                pass
+
+    threads = [threading.Thread(target=work, args=(i,)) for i in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    leaves = [r for r in tr.finished if r.name == "leaf"]
+    sides = {r.attrs["side"]: r for r in tr.finished if r.name == "side"}
+    assert len(leaves) == 2 and len(sides) == 2
+    for leaf in leaves:
+        # Each leaf's parent is its own thread's "side" span.
+        assert leaf.parent == sides[leaf.attrs["side"]].sid
+        assert leaf.tid == sides[leaf.attrs["side"]].tid
+
+
+def test_phase_breakdown_aggregates_and_sorts():
+    tr = Tracer()
+    for _ in range(3):
+        with tr.span("a"):
+            pass
+    with tr.span("b"):
+        pass
+    bd = tr.phase_breakdown()
+    assert bd["a"]["count"] == 3 and bd["b"]["count"] == 1
+    totals = [agg["total_s"] for agg in bd.values()]
+    assert totals == sorted(totals, reverse=True)
+
+
+# --------------------------------------------------- NullTracer contract
+
+def test_null_tracer_is_allocation_free_singletons():
+    nt = live(None)
+    assert nt is NULL_TRACER
+    assert live(nt) is nt
+    tr = Tracer()
+    assert live(tr) is tr
+    assert nt.span("x", ii=1) is NULL_SPAN
+    assert nt.span("y") is nt.span("z")
+    c = nt.counter("portfolio.iters")
+    c.inc()
+    c.inc(5)
+    assert nt.counter_value("portfolio.iters") == 0
+    nt.count("certify.csp_nodes", 41)
+    nt.gauge("portfolio.best", 3)
+    assert nt.phase_breakdown() == {}
+    assert NullTracer().finished == ()
+    with nt.span("ctx") as sp:
+        assert sp.set(anything=1) is sp
+
+
+SLOW = {(2, 8, "busmap"), (5, 5, "busmap")}
+BIT_CASES = [
+    pytest.param(n, m, mode, marks=pytest.mark.slow)
+    if (n, m, mode) in SLOW else (n, m, mode)
+    for n, m in PAPER_KERNELS for mode in ("bandmap", "busmap")
+]
+
+
+@pytest.mark.parametrize("n,m,mode", BIT_CASES)
+def test_tracer_bit_identity_on_paper_kernels(n, m, mode):
+    """tracer=None and a recording Tracer must produce the identical
+    mapping — tracing never touches the RNG stream or search state."""
+    kw = dict(mode=mode, seed=0)
+    base = map_dfg(make_cnkm(n, m), CGRAConfig(), **kw)
+    tr = Tracer()
+    traced = map_dfg(make_cnkm(n, m), CGRAConfig(), tracer=tr, **kw)
+    label = f"{cnkm_name(n, m)}:{mode}"
+    assert (base.ok, base.ii, base.n_routing_pes, base.attempts) == \
+        (traced.ok, traced.ii, traced.n_routing_pes,
+         traced.attempts), label
+    assert base.mis_size == traced.mis_size, label
+    # And the traced run actually recorded the pipeline.
+    names = {r.name for r in tr.finished}
+    assert "map-dfg" in names and "conflict-build" in names, label
+    assert names <= set(PHASES), names - set(PHASES)
+
+
+def test_traced_run_exports_valid_chrome_trace():
+    tr = Tracer()
+    r = map_dfg(make_cnkm(5, 5), CGRAConfig(), tracer=tr)
+    assert r.ok
+    doc = to_chrome_trace(tr, process_name="c5k5")
+    # Must survive strict JSON serialization (Perfetto requirement).
+    blob = json.loads(json.dumps(doc))
+    events = blob["traceEvents"]
+    x_names = {e["name"] for e in events if e["ph"] == "X"}
+    for phase in ("map-dfg", "conflict-build", "certify", "portfolio",
+                  "validate"):
+        assert phase in x_names, phase
+    for e in events:
+        assert e["ph"] in ("X", "C", "M")
+        assert e["ts"] >= 0
+        if e["ph"] == "X":
+            assert e["dur"] >= 0
+            assert isinstance(e["tid"], int) and e["tid"] < 64
+    (cev,) = [e for e in events if e["ph"] == "C"]
+    assert cev["args"]["certify.csp_nodes"] > 0
+    assert tr.counter_value("certify.csp_nodes") == \
+        cev["args"]["certify.csp_nodes"]
+
+
+# -------------------------------------------------------- export round-trip
+
+def test_to_json_from_json_round_trip():
+    tr = Tracer()
+    with tr.span("outer", ii=3):
+        with tr.span("inner", stage="exhausted", nodes=12):
+            pass
+    tr.count("certify.csp_nodes", 12)
+    payload = json.loads(json.dumps(to_json(tr)))
+    spans = from_json(payload)
+    assert spans == tr.finished
+    assert all(isinstance(s, SpanRecord) for s in spans)
+    assert payload["metrics"]["counters"]["certify.csp_nodes"] == 12
+
+
+def test_chrome_trace_numpy_attrs_coerced():
+    tr = Tracer()
+    with tr.span("s", n=np.int64(5), cov=np.float32(0.5),
+                 shape=(np.int32(2), 3)):
+        pass
+    doc = json.loads(json.dumps(to_chrome_trace(tr)))
+    args = [e for e in doc["traceEvents"] if e["ph"] == "X"][0]["args"]
+    assert args == {"n": 5, "cov": 0.5, "shape": [2, 3]}
+
+
+# ------------------------------------------------------------- registry
+
+def test_histogram_percentiles_match_numpy():
+    reg = MetricsRegistry()
+    rng = np.random.default_rng(7)
+    samples = rng.exponential(scale=0.01, size=500)
+    for s in samples:
+        reg.observe("latency_s", float(s))
+    p50, p95, p99 = reg.percentiles("latency_s")
+    assert p50 == pytest.approx(np.percentile(samples, 50))
+    assert p95 == pytest.approx(np.percentile(samples, 95))
+    assert p99 == pytest.approx(np.percentile(samples, 99))
+    snap = reg.snapshot()
+    h = snap["histograms"]["latency_s"]
+    assert h["count"] == 500
+    assert h["p99"] == pytest.approx(p99)
+    assert h["mean"] == pytest.approx(samples.mean())
+    assert h["max"] == pytest.approx(samples.max())
+
+
+def test_gauge_tracks_last_min_max_mean():
+    reg = MetricsRegistry()
+    for v in (3, 1, 4, 1, 5):
+        reg.gauge("portfolio.best", v)
+    g = reg.snapshot()["gauges"]["portfolio.best"]
+    assert g == dict(last=5, min=1, max=5, count=5, mean=2.8)
+
+
+def test_snapshot_reset_is_atomic_clear():
+    reg = MetricsRegistry()
+    reg.inc("portfolio.iters", 10)
+    reg.observe("latency_s", 0.5)
+    reg.gauge("queue_depth", 3)
+    snap = reg.snapshot(reset=True)
+    assert snap["counters"]["portfolio.iters"] == 10
+    after = reg.snapshot()
+    assert after == dict(counters={}, gauges={}, histograms={})
+    # The registry keeps working after a reset.
+    reg.inc("portfolio.iters", 2)
+    assert reg.counter_value("portfolio.iters") == 2
+
+
+def test_concurrent_counter_increments_lossless():
+    reg = MetricsRegistry()
+    tr = Tracer(registry=reg)
+    n_threads, per_thread = 8, 2000
+
+    def work():
+        handle = tr.counter("portfolio.iters")
+        for _ in range(per_thread):
+            handle.inc()
+            reg.inc("certify.csp_nodes", 2)
+
+    threads = [threading.Thread(target=work) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert tr.counter_value("portfolio.iters") == n_threads * per_thread
+    assert reg.counter_value("certify.csp_nodes") == \
+        n_threads * per_thread * 2

@@ -260,3 +260,34 @@ def test_map_trace_driver():
     m = run_map_trace(6, scale="4x4", rows=4, cols=4, seed=0,
                       max_workers=2, quiet=True)
     assert m["requests"] == 6 and m["ok"] == 6
+
+
+def test_metrics_p99_queue_depth_and_reset():
+    """The `repro.obs.MetricsRegistry`-backed metrics: p99 latency,
+    the queue-depth gauge, and `metrics(reset=True)` draining the
+    window while leaving the cache intact."""
+    svc = MappingService(max_workers=2)
+    trace = make_request_trace(10, scale="4x4", seed=3)
+    svc.map_batch([MapRequest(dfg=t.dfg, cgra=CGRA, deadline=t.deadline)
+                   for t in trace])
+    m = svc.metrics()
+    assert m["p99_ms"] >= m["p95_ms"] >= m["p50_ms"] >= 0
+    assert m["queue_depth"]["last"] == 10     # batch size at admission
+    assert m["queue_depth"]["max"] >= m["queue_depth"]["last"]
+
+    # A shared registry is injectable (the obs layer owns the store).
+    from repro.obs import MetricsRegistry
+    reg = MetricsRegistry()
+    assert MappingService(registry=reg).registry is reg
+
+    # reset=True drains the counter window...
+    drained = svc.metrics(reset=True)
+    assert drained["requests"] == 10
+    after = svc.metrics()
+    assert after["requests"] == 0 and after["p99_ms"] == 0
+    # ...but not the mapping cache: a repeat batch still hits.
+    outs = svc.map_batch([MapRequest(dfg=t.dfg, cgra=CGRA,
+                                     deadline=t.deadline)
+                          for t in trace])
+    assert all(o.hit for o in outs)
+    assert svc.metrics()["hit_rate"] == 1.0
