@@ -35,6 +35,14 @@ Sections (all written to artifacts/bench/bench_mis.json):
                    kick off/on at equal budget, plus the end-to-end
                    map at pinned II (flag off stalls below full
                    coverage; flag on binds and validates).
+  device_engine  — the accelerator-resident portfolio
+                   (`core.mis_device.DeviceSBTS`, vmapped Pallas SBTS,
+                   interpret mode on CPU) vs the numpy oracle at an
+                   equal lock-step iteration budget: coverage-at-budget
+                   and wall on an 8x8-fabric conflict graph with the
+                   device side swept over the vmapped seed count K
+                   (32/256/1024 — the knob a real accelerator scales
+                   almost for free), plus a reduced 16x16-scale row.
   serve          — mapping-as-a-service: a ~200-request Zipf-popularity
                    trace of permuted 8x8-scale kernels, served
                    cacheless (one `map_dfg` per request) vs through
@@ -441,6 +449,78 @@ def bench_serve(quick: bool = False) -> list[dict]:
     return rows
 
 
+def _device_graph(dfg, cgra, mode: str = "busmap", min_ii: int = 1):
+    """Conflict graph at the first schedulable (II, jitter=0) from
+    max(MII, min_ii) — the same fixed-point the differential tests
+    bench against, so coverage numbers are comparable across runs."""
+    from repro.core.schedule import mii
+    start = max(mii(dfg, cgra), min_ii)
+    for ii in range(start, start + 8):
+        try:
+            sched = schedule_dfg(dfg, cgra, ii=ii, max_ii=ii, mode=mode,
+                                 jitter=0, seed=0)
+        except RuntimeError:
+            continue
+        return build_conflict_graph(sched, cgra), len(sched.dfg.ops)
+    raise RuntimeError("no schedulable II found")
+
+
+def bench_device_engine(quick: bool = False) -> list[dict]:
+    """Device engine vs numpy oracle at an equal lock-step budget (see
+    module docstring).  Walls include engine construction and the
+    one-off jit trace — the real per-deployment cost at these sizes.
+    The numpy side runs its deployment-realistic seed count (8); the
+    device side sweeps K, where extra trajectories cost only lane
+    width.  Interpret mode on CPU is the CI-validated path; walls here
+    bound the worst case, not accelerator throughput."""
+    from repro.core.mis import PortfolioSBTS
+    from repro.core.mis_device import DeviceSBTS
+
+    iters = 48
+    rows = []
+    big = CGRAConfig(rows=8, cols=8)
+    cg, n_ops = _device_graph(make_cnkm(4, 8), big)
+    t0 = time.perf_counter()
+    ref = PortfolioSBTS(cg.bits, [None] * 8, seed=0)
+    ref.run(iters, target=n_ops)
+    rows.append(dict(
+        kernel="C4K8@8x8", mode="numpy_k8", v_c=cg.n, k=8, iters=iters,
+        coverage=f"{int(ref.best_size.max())}/{n_ops}",
+        wall_s=round(time.perf_counter() - t0, 3)))
+    print(f"device_engine: {rows[-1]}")
+    for k in (32, 256) if quick else (32, 256, 1024):
+        t0 = time.perf_counter()
+        dev = DeviceSBTS(cg.bits, k=k, seed=0)
+        dev.run(iters, target=n_ops)
+        rows.append(dict(
+            kernel="C4K8@8x8", mode=f"device_k{k}", v_c=cg.n, k=k,
+            iters=iters,
+            coverage=f"{int(dev.best_size.max())}/{n_ops}",
+            wall_s=round(time.perf_counter() - t0, 3)))
+        print(f"device_engine: {rows[-1]}")
+    if not quick:
+        from repro.core import scale_16x16_loop
+        huge = CGRAConfig(rows=16, cols=16)
+        cg16, n16 = _device_graph(
+            scale_16x16_loop(n_chains=4, chain_len=4), huge,
+            mode="bandmap", min_ii=5)
+        for mode, engine, k in (("numpy_k4", PortfolioSBTS, 4),
+                                ("device_k64", DeviceSBTS, 64)):
+            t0 = time.perf_counter()
+            if engine is PortfolioSBTS:
+                eng = PortfolioSBTS(cg16.bits, [None] * k, seed=0)
+            else:
+                eng = DeviceSBTS(cg16.bits, k=k, seed=0)
+            eng.run(iters, target=n16)
+            rows.append(dict(
+                kernel="loop16@16x16", mode=mode, v_c=cg16.n, k=k,
+                iters=iters,
+                coverage=f"{int(eng.best_size.max())}/{n16}",
+                wall_s=round(time.perf_counter() - t0, 3)))
+            print(f"device_engine: {rows[-1]}")
+    return rows
+
+
 def bench_exact(quick: bool = False) -> list[dict]:
     """Exact prover and the race vs the portfolio, per paper kernel:
     wall times side by side, the portfolio's optimality gap against the
@@ -504,6 +584,7 @@ def run_all(quick: bool = False) -> dict:
         cgra_8x8=bench_8x8(quick),
         comap=bench_comap(quick),
         group_move=bench_group_move(quick),
+        device_engine=bench_device_engine(quick),
         serve=bench_serve(quick),
     )
     os.makedirs(ART, exist_ok=True)

@@ -1,11 +1,13 @@
 """Bench-regression gate for CI: diff a fresh ``bench_mis.json`` against
 the committed baseline and fail on a >2x wall-time regression of any
-kernel (kernel_table, straggler, exact, cgra_8x8, comap, group_move and
-serve rows are all keyed by (kernel, mode) — the exact section gates
-the complete prover and the exact-vs-portfolio race, the comap section
-the 16x16 scale and the multi-kernel co-mapping path, group_move the
-kick neighbourhood's flag-on/off engine comparison, serve the
-Zipf-trace cacheless/cached throughput pair of the mapping service).
+kernel (kernel_table, straggler, exact, cgra_8x8, comap, group_move,
+device_engine and serve rows are all keyed by (kernel, mode) — the
+exact section gates the complete prover and the exact-vs-portfolio
+race, the comap section the 16x16 scale and the multi-kernel
+co-mapping path, group_move the kick neighbourhood's flag-on/off
+engine comparison, device_engine the accelerator-resident portfolio's
+K-sweep walls against the numpy oracle, serve the Zipf-trace
+cacheless/cached throughput pair of the mapping service).
 
   python benchmarks/check_regression.py \
       --baseline /tmp/bench_baseline.json \
@@ -49,7 +51,7 @@ import sys
 
 
 SECTIONS = ("kernel_table", "straggler", "exact", "cgra_8x8", "comap",
-            "group_move", "serve")
+            "group_move", "device_engine", "serve")
 
 
 def _rows(bench: dict) -> dict[tuple, float]:

@@ -246,6 +246,11 @@ def bench_mis_engine(quick: bool = False):
             last = sorted(cov, key=int)[-1]
             rows.append([f"group_move_{row['kernel']}_{row['mode']}_"
                          f"coverage@{last}", f"{cov[last]}/{row['n_ops']}"])
+    for row in bench["device_engine"]:
+        rows.append([f"device_{row['kernel']}_{row['mode']}_wall_s",
+                     row["wall_s"]])
+        rows.append([f"device_{row['kernel']}_{row['mode']}_coverage",
+                     row["coverage"]])
     for row in bench["serve"]:
         rows.append([f"serve_{row['kernel']}_{row['mode']}_rps",
                      row["rps"]])

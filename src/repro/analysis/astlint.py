@@ -56,6 +56,19 @@ tests/test_analysis_astlint.py):
     the exact identity checks ``tracer is None`` / ``tracer is not
     None`` — the engine must never branch on trace *content*.
 
+``options-single-source``
+    In the engine modules behind the `MapOptions` facade
+    (``core/bandmap.py``, ``exact/backend.py``, ``exact/race.py``,
+    ``serve/scheduler.py``, ``comap/comap.py``): a mapping knob may
+    only be read from a `MapOptions` instance, never pulled out of a
+    loose dict — no ``d["mis_iters"]`` subscripts and no
+    ``d.get/.pop/.setdefault("seed")`` calls whose key is a
+    `core.options.LEGACY_KNOBS` name.  Membership tests (``"seed" in
+    d``) stay legal (that is how the seed-pinning precedence is
+    detected), and `MapOptions.from_kwargs`/`coerce` are the one
+    adapter allowed to consume such dicts — they live in
+    ``core/options.py``, outside the rule's scope.
+
 Run ``python -m repro.analysis.astlint [paths...]`` (default ``src``);
 exit code 1 iff any finding.
 """
@@ -79,6 +92,19 @@ _TRACER_MODULES = ("repro/core/mis.py", "repro/core/certify.py",
                    "repro/exact/backend.py", "repro/exact/race.py",
                    "repro/comap/comap.py")
 _RESULT_MODULE = "repro/core/bandmap.py"
+_OPTIONS_MODULES = ("repro/core/bandmap.py", "repro/exact/backend.py",
+                    "repro/exact/race.py", "repro/serve/scheduler.py",
+                    "repro/comap/comap.py")
+# Mirror of core.options.LEGACY_KNOBS keys (astlint parses source, it
+# never imports the linted package); tests/test_analysis_astlint.py
+# asserts the two sets stay equal.
+_KNOB_NAMES = frozenset({
+    "mode", "seed", "backend", "bus_pressure", "max_ii", "min_ii",
+    "use_grf", "max_bus_fanout", "certify", "certify_budget",
+    "n_exact_placements", "static_prepass", "hall",
+    "exact_node_budget", "mis_restarts", "mis_iters", "engine",
+    "device_seeds", "group_move", "row_cache_limit",
+})
 # SERIAL_VERSION -> sha256(",".join(field names))[:16].  Adding,
 # removing or reordering MappingResult fields requires bumping the
 # version in bandmap.py AND adding the new pair here — that is the
@@ -401,13 +427,40 @@ def _rule_tracer_default_none(tree, rel, out):
                     "content"))
 
 
+def _rule_options_single_source(tree, rel, out):
+    if not rel.endswith(_OPTIONS_MODULES):
+        return
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Subscript) and \
+                isinstance(node.ctx, ast.Load) and \
+                isinstance(node.slice, ast.Constant) and \
+                node.slice.value in _KNOB_NAMES:
+            out.append(AstFinding(
+                rel, node.lineno, "options-single-source",
+                f"mapping knob {node.slice.value!r} read from a dict "
+                f"subscript — engine modules read knobs from a "
+                f"MapOptions instance only"))
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr in ("get", "pop", "setdefault") and \
+                node.args and \
+                isinstance(node.args[0], ast.Constant) and \
+                node.args[0].value in _KNOB_NAMES:
+            out.append(AstFinding(
+                rel, node.lineno, "options-single-source",
+                f"mapping knob {node.args[0].value!r} read via "
+                f".{node.func.attr}() — engine modules read knobs "
+                f"from a MapOptions instance only"))
+
+
 _RULES = (_rule_mapping_result_ok, _rule_cancel_poll,
           _rule_serial_version_pin, _rule_lock_guarded_state,
-          _rule_no_wallclock_canonical, _rule_tracer_default_none)
+          _rule_no_wallclock_canonical, _rule_tracer_default_none,
+          _rule_options_single_source)
 
 RULE_NAMES = ("mapping-result-ok", "cancel-poll", "serial-version-pin",
               "lock-guarded-state", "no-wallclock-canonical",
-              "tracer-default-none")
+              "tracer-default-none", "options-single-source")
 
 
 # ------------------------------------------------------------------ api

@@ -34,6 +34,7 @@ from repro.core.bandmap import MappingResult, map_dfg
 from repro.core.cgra import CGRAConfig
 from repro.core.conflict import Vertex
 from repro.core.dfg import DFG
+from repro.core.options import MapOptions
 from repro.core.schedule import ScheduledDFG, mii
 from repro.core.validate import ValidationReport, validate_mapping
 from repro.core.workloads import op_weight
@@ -72,23 +73,30 @@ class CoMapResult:
                 f"[{per}]")
 
 
-def co_map(dfgs: list[DFG], cgra: CGRAConfig, *, mode: str = "bandmap",
-           max_ii: int = 32, min_ii: int | None = None, seed: int = 0,
+def co_map(dfgs: list[DFG], cgra: CGRAConfig,
+           options: "MapOptions | dict | None" = None, *,
            rounds: int = 4, grf_split: bool = True, tracer=None,
-           **map_kw) -> CoMapResult:
+           **kwargs) -> CoMapResult:
     """Co-map ``dfgs`` onto ``cgra``; see the module docstring.
 
-    ``rounds`` bounds the arbitration/validation retries per II before
-    escalating.  ``min_ii`` floors the common-II search (a caller
-    pacing the kernels to an external rate passes the same floor it
-    would pass to `map_dfg`).  ``grf_split`` divides the global
-    register file evenly among regions for the local runs (the pooled
-    budget is re-checked by the arbiter and the merged replay either
-    way).  ``tracer`` (default None) records per-region "comap-region"
-    spans, "arbitrate"/"merge-replay" spans and the
-    ``comap.arbitration_retries`` counter; see `repro.obs`.  Remaining
-    keyword arguments are forwarded to every `map_dfg` call
-    (mis_restarts, certify, row_cache_limit, ...)."""
+    Mapping knobs take the same `MapOptions` / dict / legacy-keyword
+    forms as `map_dfg` (``mode``, ``max_ii``, ``mis_restarts``,
+    ``certify``, ...); each region run is a full `map_dfg` under those
+    options with its II pinned to the common-II cursor and a
+    region-diversified seed.  ``rounds`` (arbitration/validation
+    retries per II before escalating) and ``grf_split`` (divide the
+    global register file evenly among regions for the local runs — the
+    pooled budget is re-checked by the arbiter and the merged replay
+    either way) are co-mapping knobs, not `MapOptions` fields, so they
+    stay true keyword arguments.  ``min_ii`` floors the common-II
+    search (a caller pacing the kernels to an external rate passes the
+    same floor it would pass to `map_dfg`).  ``tracer`` (default None)
+    records per-region "comap-region" spans, "arbitrate"/"merge-replay"
+    spans and the ``comap.arbitration_retries`` counter; see
+    `repro.obs`."""
+    opts = MapOptions.coerce(options, kwargs)
+    seed = opts.seed
+    max_ii, min_ii = opts.schedule.max_ii, opts.schedule.min_ii
     trc = live(tracer)
     t0 = _time.perf_counter()
     k = len(dfgs)
@@ -115,9 +123,11 @@ def co_map(dfgs: list[DFG], cgra: CGRAConfig, *, mode: str = "bandmap",
                 with trc.span("comap-region", region=i, round=rnd,
                               ii=ii_star) as sp:
                     results[i] = map_dfg(
-                        dfgs[i], cfgs[i], mode=mode, min_ii=ii_star,
-                        max_ii=ii_star, seed=seed + 131 * rnd + 17 * i,
-                        tracer=tracer, **map_kw)
+                        dfgs[i], cfgs[i],
+                        options=opts.replace(
+                            min_ii=ii_star, max_ii=ii_star,
+                            seed=seed + 131 * rnd + 17 * i),
+                        tracer=tracer)
                     sp.set(ok=results[i].ok)
             if not all(r is not None and r.ok for r in results):
                 # Some region cannot bind at this common II at all —

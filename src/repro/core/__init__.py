@@ -12,6 +12,8 @@ from .kernels_cnkm import (EXTRA_KERNELS, PAPER_KERNELS,
                            all_paper_kernels, cnkm_name, make_cnkm)
 from .mis import (GroupMoveConfig, greedy_mis, solve_mis,
                   solve_mis_portfolio)
+from .options import (CertifyOptions, MapOptions, PortfolioOptions,
+                      ScheduleOptions)
 from .schedule import ScheduledDFG, mii, res_mii, schedule_dfg
 from .tec import TEC
 from .workloads import (COMAP_16X16_SPECS, TraceRequest, WorkloadSpec,
@@ -26,6 +28,8 @@ __all__ = [
     "CGRAConfig", "DFG", "Edge", "Op", "OpKind", "EXTRA_KERNELS",
     "PAPER_KERNELS", "all_paper_kernels", "cnkm_name", "make_cnkm",
     "GroupMoveConfig", "greedy_mis", "solve_mis", "solve_mis_portfolio",
+    "MapOptions", "ScheduleOptions", "CertifyOptions",
+    "PortfolioOptions",
     "ScheduledDFG", "mii", "res_mii", "schedule_dfg", "TEC",
     "COMAP_16X16_SPECS", "TraceRequest", "WorkloadSpec", "generate",
     "make_loop_kernel", "make_reduction", "make_request_trace",

@@ -21,8 +21,9 @@ from .cgra import CGRAConfig
 from .conflict import (ConflictGraph, Vertex, build_conflict_graph,
                        constructive_init)
 from .dfg import DFG
-from .mis import (ROW_CACHE_LIMIT, GroupMoveConfig, PortfolioSBTS,
-                  ejection_repair, mis_indices)
+from .mis import (ROW_CACHE_LIMIT, PortfolioSBTS, ejection_repair,
+                  mis_indices)
+from .options import MapOptions
 from .schedule import ScheduledDFG, mii, schedule_dfg
 from .validate import ValidationReport, validate_mapping
 
@@ -98,144 +99,107 @@ class MappingResult:
                 f"ok={self.ok}")
 
 
-def map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
-            use_grf: bool | None = None, max_ii: int = 32,
-            min_ii: int | None = None,
-            mis_restarts: int = 10, mis_iters: int = 20000,
-            seed: int = 0, certify: bool = True,
-            bus_pressure: bool = True,
-            certify_budget: int = 200_000,
-            n_exact_placements: int = 4,
-            row_cache_limit: int | None = None,
-            max_bus_fanout: int | None = None,
-            group_move: GroupMoveConfig | bool | None = None,
-            backend: str = "portfolio",
-            static_prepass: bool = True,
-            cancel=None, tracer=None) -> MappingResult:
+def map_dfg(dfg: DFG, cgra: CGRAConfig,
+            options: "MapOptions | dict | None" = None, *,
+            cancel=None, tracer=None, **kwargs) -> MappingResult:
     """Run the full 4-phase mapping.  Phase 4 (incomplete-mapping
     processing) = MIS restarts with fresh seeds, re-scheduling with jitter
     (ASAP schedules are II-invariant, so jitter supplies the diversity),
     then II escalation — the retry loop of Fig. 3.
 
-    ``certify`` runs the II-infeasibility certificate stages
-    (`core.certify`) on every (II, jitter) schedule before the portfolio:
-    a certified combination is skipped outright (recorded in
-    ``MappingResult.certificates``), and up to ``n_exact_placements``
-    complete placements enumerated by the exhaustive stage are validated
-    directly, bypassing the portfolio when the validator accepts one
-    (enumerating several closes the residual slow path where the first
-    placement's bus packing is rejected).  ``bus_pressure`` folds the
-    provable bus-capacity structure into the conflict graph
-    (`conflict.bus_pressure_edges`).  Both default on; disabling both
-    reproduces the seed pipeline exactly.
+    Options — the `MapOptions` migration
+    ------------------------------------
+    Every mapping knob lives in `core.options.MapOptions` (frozen,
+    grouped: ``schedule`` / ``certify`` / ``portfolio``); this is the
+    single source engine modules read knobs from (the
+    ``options-single-source`` AST lint rule).  Three call styles:
 
-    ``min_ii`` starts the II escalation no lower than the given value —
-    the co-mapper (`repro.comap`) uses it to bind several kernels at one
-    common II.  ``row_cache_limit`` bounds the unpacked-row caches in
-    bytes (default `mis.ROW_CACHE_LIMIT`); graphs past it run on the
-    per-move-unpack fallback.  ``max_bus_fanout`` caps the consumers
-    served per delivery port (see `schedule._Scheduler`): on wide
-    arrays the physical M pins whole fan-outs to one row, and capping
-    it restores the multi-port split a narrow array would have used.
+    - structured: ``map_dfg(dfg, cgra, MapOptions(mode="busmap",
+      schedule=ScheduleOptions(max_ii=8)))``;
+    - a plain option dict (the serve tier's wire format):
+      ``map_dfg(dfg, cgra, {"mode": "busmap", "max_ii": 8})``;
+    - legacy keywords, bit-identical to the pre-`MapOptions` engine:
+      ``map_dfg(dfg, cgra, mode="busmap", max_ii=8)``.
 
-    ``group_move`` enables the portfolio's clustered kick neighbourhood
-    (`mis.GroupMoveConfig`; ``True`` = defaults, ``None``/``False`` =
-    off).  Off is the default and keeps the portfolio bit-identical to
-    the flag-less engine; on, the kick periodically ejects and
-    re-places whole blocking clusters — the move the tightly-coupled
-    workloads (a VIO's bus-fed consumers spread over rows) need to
-    escape their ~90 % coverage stall.
+    Dict and keyword forms go through exactly one adapter,
+    `MapOptions.from_kwargs` (unknown keys warn and are dropped); the
+    legacy->group renaming is `core.options.LEGACY_KNOBS`
+    (``mis_restarts`` -> ``portfolio.restarts``, ``certify_budget`` ->
+    ``certify.budget``, ...).  ``cancel`` and ``tracer`` stay true
+    keyword arguments: they are runtime handles, not reproducible
+    mapping knobs, and never enter `MapOptions.fingerprint` (the serve
+    cache key).
 
-    ``static_prepass`` (default on) consults the schedule-free demand
-    analysis (`repro.analysis.demand`) once up front: II values below
-    the static floor are skipped outright, each recorded as an
-    `IICertificate` with ``stage='static-demand'`` and ``jitter=-1``
-    (the bound covers every jitter at once).  The floor is provably
-    MII on every shipped kernel family — singleton demand components —
-    so the default changes nothing there; on dense VIO/VOO components
-    it skips (II, jitter) combinations the certificate stages would
-    otherwise exhaust one schedule at a time.
+    Knob highlights (full reference: `core.options` docstrings):
+    ``certify`` runs the II-infeasibility certificate stages before the
+    portfolio; ``bus_pressure`` folds provable bus-capacity structure
+    into the conflict graph; ``static_prepass`` skips statically-doomed
+    IIs via the schedule-free demand analysis; ``min_ii`` floors the II
+    escalation (the co-mapper's common-II handle); ``row_cache_limit``
+    bounds the unpacked-row caches in bytes; ``max_bus_fanout`` caps
+    consumers per delivery port; ``group_move`` enables the clustered
+    kick neighbourhood (`mis.GroupMoveConfig`); ``backend`` selects
+    ``"portfolio"`` | ``"exact"`` | ``"race"`` (`repro.exact`).
 
-    ``backend`` selects the engine: ``"portfolio"`` (default, the loop
-    below), ``"exact"`` (the complete prover in `repro.exact.backend`,
-    with ``certify_budget`` as its per-combination node budget), or
-    ``"race"`` (both at once, first sound answer wins — see
-    `repro.exact.race`).  ``cancel`` (`core.cancel.CancelToken`) makes
-    the run cooperatively cancellable: polled between (II, jitter)
-    combinations, between harvest rounds, and inside the portfolio's
-    iteration loop; a cancelled run returns its best-effort ``ok=False``
-    result.  ``cancel=None`` (default) is bit-identical to the
-    flag-less engine.
+    ``engine`` (``portfolio.engine``) selects the portfolio
+    implementation: ``"numpy"`` (the lock-step `mis.PortfolioSBTS`
+    oracle, default) or ``"device"`` — the accelerator-resident vmapped
+    engine (`core.mis_device.DeviceSBTS`, ``device_seeds`` trajectories
+    through the `kernels.sbts_step` Pallas kernel, interpret mode on
+    CPU backends).  Both feed the same harvest → dedupe → repair →
+    validate loop; device rounds trace as "portfolio-device" spans.
 
+    ``cancel`` (`core.cancel.CancelToken`) makes the run cooperatively
+    cancellable: polled between (II, jitter) combinations, between
+    harvest rounds, and inside the portfolio's iteration loop; a
+    cancelled run returns its best-effort ``ok=False`` result.
     ``tracer`` (`repro.obs.Tracer`, default None) records the run as a
     span tree — "map-dfg" at the root, per-phase children (see
-    `repro.obs` for the stable span taxonomy).  Tracing is observation
-    only: a ``tracer=None`` run is bit-identical to a traced one (the
-    NullTracer contract, enforced by the ``tracer-default-none`` AST
-    lint rule)."""
-    if backend != "portfolio":
+    `repro.obs` for the stable span taxonomy).  Both defaults are
+    bit-identical to the flag-less engine (NullTracer contract,
+    enforced by the ``tracer-default-none`` AST lint rule)."""
+    opts = MapOptions.coerce(options, kwargs)
+    if opts.backend != "portfolio":
         from repro.exact import exact_map_dfg, race_map_dfg
-        if backend == "exact":
-            return exact_map_dfg(
-                dfg, cgra, mode=mode, use_grf=use_grf, max_ii=max_ii,
-                min_ii=min_ii, seed=seed, node_budget=certify_budget,
-                bus_pressure=bus_pressure, row_cache_limit=row_cache_limit,
-                max_bus_fanout=max_bus_fanout, cancel=cancel,
-                tracer=tracer)
-        if backend == "race":
-            return race_map_dfg(
-                dfg, cgra, mode=mode, use_grf=use_grf, max_ii=max_ii,
-                min_ii=min_ii, mis_restarts=mis_restarts,
-                mis_iters=mis_iters, seed=seed, certify=certify,
-                bus_pressure=bus_pressure, certify_budget=certify_budget,
-                n_exact_placements=n_exact_placements,
-                row_cache_limit=row_cache_limit,
-                max_bus_fanout=max_bus_fanout, group_move=group_move,
-                cancel=cancel, tracer=tracer)
-        raise ValueError(f"unknown mapping backend {backend!r}")
-    with live(tracer).span("map-dfg", mode=mode,
+        if opts.backend == "exact":
+            return exact_map_dfg(dfg, cgra, options=opts, cancel=cancel,
+                                 tracer=tracer)
+        if opts.backend == "race":
+            return race_map_dfg(dfg, cgra, options=opts, cancel=cancel,
+                                tracer=tracer)
+        raise ValueError(f"unknown mapping backend {opts.backend!r}")
+    with live(tracer).span("map-dfg", mode=opts.mode,
                            n_ops=len(dfg.ops)) as sp:
-        res = _map_dfg_portfolio(
-            dfg, cgra, mode=mode, use_grf=use_grf, max_ii=max_ii,
-            min_ii=min_ii, mis_restarts=mis_restarts,
-            mis_iters=mis_iters, seed=seed, certify=certify,
-            bus_pressure=bus_pressure, certify_budget=certify_budget,
-            n_exact_placements=n_exact_placements,
-            row_cache_limit=row_cache_limit,
-            max_bus_fanout=max_bus_fanout, group_move=group_move,
-            static_prepass=static_prepass, cancel=cancel, tracer=tracer)
+        res = _map_dfg_portfolio(dfg, cgra, opts, cancel=cancel,
+                                 tracer=tracer)
         sp.set(ok=res.ok, ii=res.ii, attempts=res.attempts)
         return res
 
 
-def _map_dfg_portfolio(dfg: DFG, cgra: CGRAConfig, *, mode, use_grf,
-                       max_ii, min_ii, mis_restarts, mis_iters, seed,
-                       certify, bus_pressure, certify_budget,
-                       n_exact_placements, row_cache_limit,
-                       max_bus_fanout, group_move, static_prepass,
-                       cancel, tracer=None) -> MappingResult:
+def _map_dfg_portfolio(dfg: DFG, cgra: CGRAConfig, opts: "MapOptions",
+                       *, cancel, tracer=None) -> MappingResult:
     trc = live(tracer)
     t_start = _time.perf_counter()
+    mode, seed = opts.mode, opts.seed
+    sch, pf, ct = opts.schedule, opts.portfolio, opts.certify
     the_mii = mii(dfg, cgra)
-    cache_limit = ROW_CACHE_LIMIT if row_cache_limit is None \
-        else row_cache_limit
-    if group_move is True:
-        group_move = GroupMoveConfig()
-    elif group_move is False:
-        group_move = None
+    cache_limit = ROW_CACHE_LIMIT if pf.row_cache_limit is None \
+        else pf.row_cache_limit
+    device_engine = pf.engine == "device"
+    round_span = "portfolio-device" if device_engine else "portfolio"
     static_floor, static_detail = the_mii, ""
-    if static_prepass:
+    if ct.static_prepass:
         from repro.analysis.demand import implied_demand_bounds
         with trc.span("static-prepass", mii=the_mii) as ssp:
-            for b in implied_demand_bounds(dfg, cgra,
-                                           max_bus_fanout=max_bus_fanout):
+            for b in implied_demand_bounds(
+                    dfg, cgra, max_bus_fanout=sch.max_bus_fanout):
                 if b.min_ii > static_floor:
                     static_floor, static_detail = b.min_ii, b.summary()
             ssp.set(floor=static_floor)
     attempts = 0
     certificates: list[IICertificate] = []
     last: tuple = (None, None, None, 0, (0, 0))
-    for cur_ii in range(max(the_mii, min_ii or 0), max_ii + 1):
+    for cur_ii in range(max(the_mii, sch.min_ii or 0), sch.max_ii + 1):
         if cancel is not None and cancel.is_set():
             break
         if cur_ii < static_floor:
@@ -251,25 +215,27 @@ def _map_dfg_portfolio(dfg: DFG, cgra: CGRAConfig, *, mode, use_grf,
                 break
             try:
                 with trc.span("schedule", ii=cur_ii, jitter=jitter):
-                    sched = schedule_dfg(dfg, cgra, mode=mode, ii=cur_ii,
-                                         max_ii=cur_ii, use_grf=use_grf,
-                                         jitter=jitter, seed=seed,
-                                         max_bus_fanout=max_bus_fanout)
+                    sched = schedule_dfg(
+                        dfg, cgra, mode=mode, ii=cur_ii,
+                        max_ii=cur_ii, use_grf=sch.use_grf,
+                        jitter=jitter, seed=seed,
+                        max_bus_fanout=sch.max_bus_fanout)
             except RuntimeError:
                 continue
             cg = build_conflict_graph(sched, cgra,
-                                      bus_pressure=bus_pressure,
+                                      bus_pressure=opts.bus_pressure,
                                       tracer=tracer)
             n_ops = len(sched.dfg.ops)
             # One unpacked-row cache per conflict graph, shared by the
-            # certificate search, the portfolio and the repair retries.
-            shared_u8 = cg.bits.rows_u8(np.arange(cg.n)) \
-                if 0 < cg.n * cg.n <= cache_limit else None
-            if certify:
+            # certificate search, the portfolio and the repair retries
+            # (memoized on the graph — harvest rounds and repair retries
+            # reuse it instead of re-unpacking n² rows each).
+            shared_u8 = cg.row_cache(cache_limit)
+            if ct.enabled:
                 cert, csp_sols = certify_ii_infeasible(
                     cg, sched, cgra, jitter=jitter,
-                    node_budget=certify_budget, row_cache=shared_u8,
-                    n_placements=n_exact_placements,
+                    node_budget=ct.budget, row_cache=shared_u8,
+                    n_placements=ct.n_exact_placements,
                     row_cache_limit=cache_limit, cancel=cancel,
                     tracer=tracer)
                 if cert is not None:
@@ -304,29 +270,38 @@ def _map_dfg_portfolio(dfg: DFG, cgra: CGRAConfig, *, mode, use_grf,
                             certificates=certificates)
             # Spend extra effort at II = MII: throughput is the top concern
             # (paper §III-A), so a success there dominates any II+1 mapping.
-            budget = mis_restarts * (2 if cur_ii == the_mii else 1)
+            budget = pf.restarts * (2 if cur_ii == the_mii else 1)
             # Multi-seed SBTS portfolio: K independent trajectories advance
             # in lock-step over the packed adjacency, early-exiting as soon
             # as any seed covers every op.  Most seeds warm-start from the
             # structure-aware constructive placement; some stay cold.
             base = seed * 1001 + cur_ii * 131 + jitter * 31
             with trc.span("portfolio-init", ii=cur_ii, jitter=jitter,
-                          seeds=budget):
+                          seeds=budget, engine=pf.engine):
                 inits = [constructive_init(cg, sched, cgra,
                                            seed=base + k)
                          if k % 3 != 2 else None for k in range(budget)]
                 attempts += budget
                 op_of = cg.op_of
-                sbts = PortfolioSBTS(cg.bits, inits, seed=base,
-                                     row_cache=shared_u8,
-                                     row_cache_limit=cache_limit,
-                                     op_of=op_of, group_move=group_move)
+                if device_engine:
+                    # Accelerator-resident engine: the same constructive
+                    # warm starts, fanned out to `device_seeds` lock-step
+                    # trajectories on-device (interpret mode on CPU).
+                    from .mis_device import DeviceSBTS
+                    sbts = DeviceSBTS(cg.bits, inits,
+                                      k=pf.device_seeds, seed=base)
+                else:
+                    sbts = PortfolioSBTS(cg.bits, inits, seed=base,
+                                         row_cache=shared_u8,
+                                         row_cache_limit=cache_limit,
+                                         op_of=op_of,
+                                         group_move=pf.group_move)
             # Repair retries reuse the same cache; when the graph was too
             # big for it, row_cache() materialises one lazily so the
             # retries don't each re-unpack n² rows.
             row_cache = shared_u8
             seen_sols: set[bytes] = set()
-            remaining = mis_iters
+            remaining = pf.iters
             # Harvest rounds: run the portfolio until some seed covers all
             # ops, validate every distinct complete solution, and — when
             # the validator rejects them all (bus congestion / LRF
@@ -338,7 +313,7 @@ def _map_dfg_portfolio(dfg: DFG, cgra: CGRAConfig, *, mode, use_grf,
                 if cancel is not None and cancel.is_set():
                     break
                 start_it = sbts.it
-                with trc.span("portfolio", ii=cur_ii, jitter=jitter,
+                with trc.span(round_span, ii=cur_ii, jitter=jitter,
                               round=rnd) as psp:
                     bests = sbts.run(remaining, target=n_ops,
                                      cancel=cancel, tracer=tracer)
@@ -408,8 +383,15 @@ def _map_dfg_portfolio(dfg: DFG, cgra: CGRAConfig, *, mode, use_grf,
                 # Alternate a local diversification with a fully fresh
                 # restart (the portfolio analogue of the paper's
                 # independent-restart retry) for every harvested seed.
-                for j, k in enumerate(np.flatnonzero(
-                        sbts.best_size >= n_ops)):
+                complete = np.flatnonzero(sbts.best_size >= n_ops)
+                if device_engine:
+                    # With K ~ 1000 device trajectories, hundreds may
+                    # converge per round; re-seeding them all would pay
+                    # a constructive_init per seed on the host.  The
+                    # top 16 preserve the diversification pattern at
+                    # bounded host cost.
+                    complete = complete[:16]
+                for j, k in enumerate(complete):
                     if j % 2 == 0:
                         sbts.rearm(int(k))
                     else:

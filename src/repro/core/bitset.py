@@ -202,6 +202,34 @@ class BitsetGraph:
             return False
         return bool((self.rows[members] & s_words).any())
 
+    def rows_u32(self, n_pad: int | None = None) -> np.ndarray:
+        """Adjacency rows re-viewed as uint32 words ``[n, n_pad//32]`` —
+        the device-shaped export the Pallas engines consume
+        (`kernels.sbts_step`, `core.mis_device`): `jax.numpy` has no
+        uint64, so packed sets live as uint32 on device.  Bit j of word
+        j//32 = edge to vertex j (same little-endian bit order as
+        ``rows``; on big-endian hosts the uint64 view is byteswapped
+        first).  ``n_pad`` pads both axes with zero rows/words up to the
+        given vertex count (a multiple of 32) so kernels can tile
+        without remainder handling — padded vertices have no edges."""
+        n_pad = self.n if n_pad is None else n_pad
+        if n_pad % 32 or n_pad < self.n:
+            raise ValueError(f"n_pad={n_pad} must be a multiple of 32 "
+                             f">= n={self.n}")
+        out = np.zeros((n_pad, n_pad // 32), dtype=np.uint32)
+        if _LITTLE:
+            w32 = self.rows.view(np.uint32)
+            out[:self.n, :min(w32.shape[1], out.shape[1])] = \
+                w32[:, :out.shape[1]]
+        else:  # pragma: no cover - big-endian fallback
+            bits = np.zeros((self.n, n_pad), dtype=np.uint32)
+            bits[:, :self.n] = unpack(self.rows, self.n)
+            out[:self.n] = (
+                bits.reshape(self.n, -1, 32)
+                << np.arange(32, dtype=np.uint32)).sum(
+                    axis=-1, dtype=np.uint32)
+        return out
+
     # -------------------------------------------------------- conversion
     def to_dense(self) -> np.ndarray:
         return unpack(self.rows, self.n).astype(bool)

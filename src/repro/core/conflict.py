@@ -79,6 +79,8 @@ class ConflictGraph:
     op_vertices: dict[int, list[int]]
     n_ops: int
     _adj: np.ndarray | None = dataclasses.field(default=None, repr=False)
+    _u8_cache: np.ndarray | None = dataclasses.field(default=None,
+                                                     repr=False)
 
     @property
     def n(self) -> int:
@@ -102,6 +104,21 @@ class ConflictGraph:
         moves and the repair pass key their clusters on)."""
         return np.fromiter((v.op for v in self.vertices),
                            dtype=np.int64, count=self.n)
+
+    def row_cache(self, limit: int | None = None) -> np.ndarray | None:
+        """Memoized unpacked 0/1 adjacency ``uint8 [n, n]``, shared by
+        the certificate search, every portfolio construction and the
+        repair retries over this graph — one unpackbits per conflict
+        graph instead of one per consumer (the PR 8-traced
+        portfolio-init hotspot on 16x16 fabrics).  Returns None when
+        the dense cache would exceed ``limit`` bytes (pass the
+        engine's ``row_cache_limit``); ``limit=None`` always
+        materialises."""
+        if self._u8_cache is None:
+            if limit is not None and not 0 < self.n * self.n <= limit:
+                return None
+            self._u8_cache = self.bits.rows_u8(np.arange(self.n))
+        return self._u8_cache
 
 
 def _occupancy(v: Vertex, ii: int) -> list[tuple]:

@@ -69,8 +69,18 @@ class GroupMoveConfig:
     tenure: int = 30
 
 
-def greedy_mis(adj, rng: np.random.Generator) -> np.ndarray:
-    """Randomized min-degree construction; returns a maximal IS."""
+def greedy_mis(adj, rng: np.random.Generator,
+               row_cache: np.ndarray | None = None) -> np.ndarray:
+    """Randomized min-degree construction; returns a maximal IS.
+
+    The degree update unpacks only the *killed* rows (gathered from
+    ``row_cache`` when the caller shares one): the decrement of
+    ``deg[v]`` is the number of killed neighbours of v, i.e. the
+    column sum of the killed vertices' rows — integer-identical to the
+    old whole-matrix ``popcount(rows & kill)`` pass but O(|kill| * n)
+    instead of O(n * words) per placement, which is what made cold
+    portfolio warm-starts dominate 16x16-fabric map walls (PR 8
+    traces)."""
     g = as_bitset_graph(adj)
     n = g.n
     deg = g.degrees()
@@ -84,8 +94,11 @@ def greedy_mis(adj, rng: np.random.Generator) -> np.ndarray:
         kill = g.row_u8(v).astype(bool) & alive
         alive[v] = False
         alive[kill] = False
-        deg -= np.bitwise_count(g.rows & pack_bool(kill)).sum(
-            axis=1, dtype=np.int64)
+        killed = np.flatnonzero(kill)
+        if killed.size:
+            rows = row_cache[killed] if row_cache is not None \
+                else g.rows_u8(killed)
+            deg -= rows.sum(axis=0, dtype=np.int64)
     return in_s
 
 
@@ -109,10 +122,25 @@ class PortfolioSBTS:
         self.tenure = tenure
         self.rng = np.random.default_rng(seed)
         n = g.n
+        # Unpacked 0/1 row cache for delta updates: one unpackbits of the
+        # whole packed adjacency (or a caller-shared one, e.g. the
+        # certificate stage's), after which each move's row fetch is a
+        # fancy gather.  Bounded to ``row_cache_limit`` bytes (default
+        # ROW_CACHE_LIMIT = 32 MiB); beyond that, rows are unpacked per
+        # move (still O(n/8) traffic) — the |V_C| ~ 10^4 regime of a
+        # 16x16 PEA lands on this fallback.  Resolved before the inits
+        # so cold greedy constructions gather from the shared cache.
+        self.row_cache_limit = ROW_CACHE_LIMIT if row_cache_limit is None \
+            else row_cache_limit
+        if row_cache is not None:
+            self._u8 = row_cache
+        else:
+            self._u8 = g.rows_u8(np.arange(n)) \
+                if 0 < n * n <= self.row_cache_limit else None
         self.in_s = np.zeros((self.k, n), dtype=bool)
         for i, init in enumerate(inits):
             if init is None:
-                self.in_s[i] = greedy_mis(g, self.rng)
+                self.in_s[i] = greedy_mis(g, self.rng, self._u8)
             else:
                 self.in_s[i] = init
         # conf[k, v] = number of members of S_k adjacent to v.
@@ -137,20 +165,6 @@ class PortfolioSBTS:
                                      dtype=np.float32)
         self._pool_uses = 0
         self._stride = 0   # drawn (coprime to n) at the first _draw
-        # Unpacked 0/1 row cache for delta updates: one unpackbits of the
-        # whole packed adjacency (or a caller-shared one, e.g. the
-        # certificate stage's), after which each move's row fetch is a
-        # fancy gather.  Bounded to ``row_cache_limit`` bytes (default
-        # ROW_CACHE_LIMIT = 32 MiB); beyond that, rows are unpacked per
-        # move (still O(n/8) traffic) — the |V_C| ~ 10^4 regime of a
-        # 16x16 PEA lands on this fallback.
-        self.row_cache_limit = ROW_CACHE_LIMIT if row_cache_limit is None \
-            else row_cache_limit
-        if row_cache is not None:
-            self._u8 = row_cache
-        else:
-            self._u8 = g.rows_u8(np.arange(n)) \
-                if 0 < n * n <= self.row_cache_limit else None
         self._u8_ext: np.ndarray | None = None  # row_cache() overflow copy
         # Group-move neighbourhood (off by default).  Everything below is
         # inert when disabled: the main loop's state arrays, RNG stream
@@ -373,7 +387,8 @@ class PortfolioSBTS:
         construction) — the portfolio analogue of an independent SBTS
         restart, used when a harvested solution failed downstream
         validation and its basin looks exhausted."""
-        self.in_s[k] = greedy_mis(self.g, self.rng) if init is None \
+        self.in_s[k] = greedy_mis(self.g, self.rng, self._u8) \
+            if init is None \
             else init
         self.tabu[k] = 0
         self._resync(k)

@@ -62,6 +62,7 @@ from repro.core.cgra import CGRAConfig
 from repro.core.conflict import build_conflict_graph
 from repro.core.dfg import DFG
 from repro.core.mis import ROW_CACHE_LIMIT, mis_indices
+from repro.core.options import MapOptions
 from repro.core.schedule import mii, schedule_dfg
 from repro.core.validate import validate_mapping
 from repro.obs.trace import live
@@ -89,39 +90,43 @@ class _ValidateSink:
         return False
 
 
-def exact_map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
-                  use_grf: bool | None = None, max_ii: int = 32,
-                  min_ii: int | None = None, seed: int = 0,
-                  node_budget: int = 200_000,
-                  bus_pressure: bool = True, hall: bool = True,
-                  max_bus_fanout: int | None = None,
-                  row_cache_limit: int | None = None,
-                  cancel=None, tracer=None) -> MappingResult:
+def exact_map_dfg(dfg: DFG, cgra: CGRAConfig,
+                  options: "MapOptions | dict | None" = None, *,
+                  cancel=None, tracer=None, **kwargs) -> MappingResult:
     """Prove the engine-optimal II (or certified infeasibility) for one
-    DFG — see the module docstring for the exact claims.  The signature
-    mirrors `map_dfg`'s schedule-side knobs so the race driver can hand
-    both backends the same problem; ``hall`` gates the joint bus-demand
-    bound (on by default — it only ever strengthens UNSAT proofs)."""
+    DFG — see the module docstring for the exact claims.  Accepts the
+    same `MapOptions` / dict / legacy-keyword forms as `map_dfg` so the
+    race driver can hand both backends the same problem; the CSP node
+    budget is ``certify.budget`` (the historical ``node_budget`` keyword
+    is still accepted as an alias) and ``certify.hall`` gates the joint
+    bus-demand bound (on by default — it only ever strengthens UNSAT
+    proofs)."""
+    if "node_budget" in kwargs:
+        kwargs = dict(kwargs)
+        kwargs["certify_budget"] = kwargs.pop("node_budget")
+    opts = MapOptions.coerce(options, kwargs)
+    mode, seed = opts.mode, opts.seed
+    sch, ct = opts.schedule, opts.certify
     trc = live(tracer)
     t_start = _time.perf_counter()
     the_mii = mii(dfg, cgra)
-    cache_limit = ROW_CACHE_LIMIT if row_cache_limit is None \
-        else row_cache_limit
+    cache_limit = ROW_CACHE_LIMIT if opts.portfolio.row_cache_limit \
+        is None else opts.portfolio.row_cache_limit
     certificates: list[IICertificate] = []
     proved_all = True      # every combination below the cursor decided
     attempts = 0
     last = (None, 0, (0, 0))
     cancelled = False
-    for cur_ii in range(max(the_mii, min_ii or 0), max_ii + 1):
+    for cur_ii in range(max(the_mii, sch.min_ii or 0), sch.max_ii + 1):
         for jitter in (0, 1, 2, 3):
             if cancel is not None and cancel.is_set():
                 cancelled = True
                 break
             try:
                 sched = schedule_dfg(dfg, cgra, mode=mode, ii=cur_ii,
-                                     max_ii=cur_ii, use_grf=use_grf,
+                                     max_ii=cur_ii, use_grf=sch.use_grf,
                                      jitter=jitter, seed=seed,
-                                     max_bus_fanout=max_bus_fanout)
+                                     max_bus_fanout=sch.max_bus_fanout)
             except RuntimeError:
                 # The deterministic scheduler produces nothing at this
                 # combination — there is no schedule to bind, so the
@@ -129,20 +134,21 @@ def exact_map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
                 # engine's family), not unknown.
                 continue
             cg = build_conflict_graph(sched, cgra,
-                                      bus_pressure=bus_pressure,
+                                      bus_pressure=opts.bus_pressure,
                                       tracer=tracer)
-            if hall:
+            if ct.hall:
                 hall_pressure_edges(cg.bits, cg.vertices,
                                     cg.op_vertices, sched, cgra)
             n_ops = len(sched.dfg.ops)
-            shared_u8 = cg.bits.rows_u8(np.arange(cg.n)) \
-                if 0 < cg.n * cg.n <= cache_limit else None
+            # Memoized on the graph; hall edges are already folded in,
+            # so the cache sees the strengthened adjacency.
+            shared_u8 = cg.row_cache(cache_limit)
             sink = _ValidateSink(sched, cg, cgra)
             with trc.span("exact-csp", ii=cur_ii, jitter=jitter,
                           n_ops=n_ops) as xsp:
                 cert, _ = certify_ii_infeasible(
                     cg, sched, cgra, jitter=jitter,
-                    node_budget=node_budget, row_cache=shared_u8,
+                    node_budget=ct.budget, row_cache=shared_u8,
                     row_cache_limit=cache_limit, on_solution=sink,
                     cancel=cancel, tracer=tracer)
                 xsp.set(validations=sink.tried,

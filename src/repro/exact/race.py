@@ -38,6 +38,7 @@ from repro.core.bandmap import MappingResult
 from repro.core.cancel import CancelToken
 from repro.core.cgra import CGRAConfig
 from repro.core.dfg import DFG
+from repro.core.options import MapOptions
 from repro.obs.trace import live
 
 from .backend import exact_map_dfg
@@ -54,26 +55,18 @@ def _is_sound(res: MappingResult | None) -> bool:
     return res is not None and (res.ok or res.proved_infeasible)
 
 
-def race_map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
-                 use_grf: bool | None = None, max_ii: int = 32,
-                 min_ii: int | None = None, mis_restarts: int = 10,
-                 mis_iters: int = 20000, seed: int = 0,
-                 certify: bool = True, bus_pressure: bool = True,
-                 certify_budget: int = 200_000,
-                 n_exact_placements: int = 4,
-                 row_cache_limit: int | None = None,
-                 max_bus_fanout: int | None = None,
-                 group_move=None,
-                 exact_node_budget: int | None = None,
-                 cancel=None, tracer=None) -> MappingResult:
+def race_map_dfg(dfg: DFG, cgra: CGRAConfig,
+                 options: "MapOptions | dict | None" = None, *,
+                 cancel=None, tracer=None, **kwargs) -> MappingResult:
     """Race the exact backend against the portfolio (module docstring).
 
-    Portfolio knobs are `map_dfg`'s; ``exact_node_budget`` is the
-    prover's per-(II, jitter) node budget (defaults to
-    ``certify_budget``).  Both sides run under the same ``seed``, so
-    they explore the same deterministic schedule family — which is what
-    makes an exact UNSAT binding on the portfolio side's schedules too.
-    ``cancel`` cancels the whole race.
+    Accepts the same `MapOptions` / dict / legacy-keyword forms as
+    `map_dfg`; ``certify.exact_node_budget`` is the prover's
+    per-(II, jitter) node budget (defaults to ``certify.budget``).
+    Both sides run under the same ``seed``, so they explore the same
+    deterministic schedule family — which is what makes an exact UNSAT
+    binding on the portfolio side's schedules too.  ``cancel`` cancels
+    the whole race.
 
     ``tracer`` records a "race" span (attrs: ``winner``,
     ``cancel_latency_s`` = cancel-request→loser-exit wall, and — when
@@ -85,38 +78,34 @@ def race_map_dfg(dfg: DFG, cgra: CGRAConfig, *, mode: str = "bandmap",
     separate Perfetto tracks."""
     from repro.core.bandmap import map_dfg
 
+    opts = MapOptions.coerce(options, kwargs)
+    # Both sides run the problem directly — neither must re-enter the
+    # race dispatch, so the shared option set pins backend explicitly.
+    exact_opts = opts.replace(
+        backend="exact",
+        certify_budget=opts.certify.exact_node_budget
+        if opts.certify.exact_node_budget is not None
+        else opts.certify.budget)
+    port_opts = opts.replace(backend="portfolio")
     trc = live(tracer)
     tok_exact = CancelToken(parent=cancel)
     tok_port = CancelToken(parent=cancel)
 
     def run_exact() -> MappingResult:
         with trc.span("race-side", side="exact") as sp:
-            res = exact_map_dfg(
-                dfg, cgra, mode=mode, use_grf=use_grf, max_ii=max_ii,
-                min_ii=min_ii, seed=seed,
-                node_budget=exact_node_budget if exact_node_budget
-                is not None else certify_budget,
-                bus_pressure=bus_pressure, max_bus_fanout=max_bus_fanout,
-                row_cache_limit=row_cache_limit, cancel=tok_exact,
-                tracer=tracer)
+            res = exact_map_dfg(dfg, cgra, options=exact_opts,
+                                cancel=tok_exact, tracer=tracer)
             sp.set(ok=res.ok, wall_s=res.wall_s)
             return res
 
     def run_portfolio() -> MappingResult:
         with trc.span("race-side", side="portfolio") as sp:
-            res = map_dfg(
-                dfg, cgra, mode=mode, use_grf=use_grf, max_ii=max_ii,
-                min_ii=min_ii, mis_restarts=mis_restarts,
-                mis_iters=mis_iters, seed=seed, certify=certify,
-                bus_pressure=bus_pressure, certify_budget=certify_budget,
-                n_exact_placements=n_exact_placements,
-                row_cache_limit=row_cache_limit,
-                max_bus_fanout=max_bus_fanout, group_move=group_move,
-                cancel=tok_port, tracer=tracer)
+            res = map_dfg(dfg, cgra, options=port_opts,
+                          cancel=tok_port, tracer=tracer)
             sp.set(ok=res.ok, wall_s=res.wall_s)
             return res
 
-    rsp = trc.span("race", mode=mode)
+    rsp = trc.span("race", mode=opts.mode)
     pool = ThreadPoolExecutor(max_workers=2)
     try:
         futs = {pool.submit(run_exact): "exact",

@@ -1,0 +1,6 @@
+"""Device SBTS step primitives — see `kernel` (Pallas), `ref` (numpy
+oracle) and `ops` (host dispatch)."""
+
+from .ops import selection_counts
+
+__all__ = ["selection_counts"]

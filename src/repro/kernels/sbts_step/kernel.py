@@ -1,0 +1,64 @@
+"""Pallas kernel for the device SBTS step's conflict-count evaluation.
+
+The device portfolio (`repro.core.mis_device.DeviceSBTS`) advances K
+tabu trajectories in lock-step; every step needs, for each trajectory
+k and each vertex v, the count ``|N(v) ∩ S_k|`` of v's neighbours
+inside some packed vertex set S_k (the current selection, the addable
+set, the Luby sample).  With the adjacency as packed uint32 words
+``rows32 [n_pad, W]`` (`BitsetGraph.rows_u32`) and the selections as
+``sel32 [K, W]``, that is one AND + ``lax.population_count`` + word
+reduction per (k, v) pair — the all-pairs popcount this kernel tiles
+over a (seed-block, vertex-block) grid.
+
+Tiling: ``block_k × block_n × W`` words are materialised per grid
+cell, so the defaults (8 × 1024) keep the working set a few MiB even
+at the 16x16-fabric |V_C| ~ 10^4 scale.  Block sizes that do not
+divide the operand shapes fall back to a single block on that axis —
+callers pad ``n_pad`` to a multiple of 128 (`mis_device._pad_n`), so
+the fallback only triggers for small K.  Interpret mode is the
+CI-validated path (this repo's runners are CPU-only); real-TPU
+lane-width tuning of ``W`` (last-dim 128 alignment) is the standing
+ROADMAP gap shared with `kernels.conflict_matrix`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _counts_kernel(rows_ref, sel_ref, out_ref):
+    rows = rows_ref[...]                      # (block_n, W) uint32
+    sel = sel_ref[...]                        # (block_k, W) uint32
+    hits = jax.lax.population_count(rows[None, :, :] & sel[:, None, :])
+    out_ref[...] = hits.astype(jnp.int32).sum(axis=-1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "block_k", "interpret"))
+def selection_counts_pallas(rows32, sel32, *, block_n: int = 1024,
+                            block_k: int = 8,
+                            interpret: bool = False):
+    """``int32 [K, n_pad]`` of ``popcount(rows32[v] & sel32[k])`` over
+    the word axis — |N(v) ∩ S_k| for every (trajectory, vertex) pair."""
+    n_pad, w = rows32.shape
+    k, w2 = sel32.shape
+    assert w == w2, (rows32.shape, sel32.shape)
+    if n_pad % block_n:
+        block_n = n_pad
+    if k % block_k:
+        block_k = k
+    grid = (k // block_k, n_pad // block_n)
+    return pl.pallas_call(
+        _counts_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_n, w), lambda kk, i: (i, 0)),
+                  pl.BlockSpec((block_k, w), lambda kk, i: (kk, 0))],
+        out_specs=pl.BlockSpec((block_k, block_n),
+                               lambda kk, i: (kk, i)),
+        out_shape=jax.ShapeDtypeStruct((k, n_pad), jnp.int32),
+        interpret=interpret,
+    )(rows32, sel32)

@@ -1,0 +1,26 @@
+"""Host-side dispatch for the sbts_step conflict-count primitive.
+
+The device engine (`repro.core.mis_device`) traces
+`kernel.selection_counts_pallas` directly inside its jitted step; this
+module is the host-callable split the differential tests and benches
+use — numpy reference by default, Pallas (interpret or compiled) on
+request."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import ref
+
+
+def selection_counts(rows32, sel32, *, use_pallas: bool = False,
+                     interpret: bool = False, block_n: int = 1024,
+                     block_k: int = 8) -> np.ndarray:
+    """|N(v) ∩ S_k| as ``int32 [K, n_pad]`` — see `ref` / `kernel`."""
+    if use_pallas:
+        from . import kernel
+        return np.asarray(kernel.selection_counts_pallas(
+            np.ascontiguousarray(rows32, dtype=np.uint32),
+            np.ascontiguousarray(sel32, dtype=np.uint32),
+            block_n=block_n, block_k=block_k, interpret=interpret))
+    return ref.selection_counts_ref(rows32, sel32)

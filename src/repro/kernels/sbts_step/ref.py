@@ -1,0 +1,16 @@
+"""Numpy oracle for the sbts_step conflict-count kernel."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def selection_counts_ref(rows32: np.ndarray,
+                         sel32: np.ndarray) -> np.ndarray:
+    """``int32 [K, n_pad]`` — |N(v) ∩ S_k| over packed uint32 words,
+    the same contraction `kernel.selection_counts_pallas` tiles."""
+    rows32 = np.asarray(rows32, dtype=np.uint32)
+    sel32 = np.asarray(sel32, dtype=np.uint32)
+    return np.bitwise_count(
+        rows32[None, :, :] & sel32[:, None, :]).sum(
+            axis=-1, dtype=np.int32)

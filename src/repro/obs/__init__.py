@@ -35,6 +35,9 @@ span name        emitted by / attributes
                  ``ii``, ``jitter``, ``seeds``
 ``portfolio``    one `PortfolioSBTS` harvest round — ``ii``, ``round``,
                  ``coverage``, ``best``
+``portfolio-device``  one `mis_device.DeviceSBTS` harvest round (the
+                 accelerator-resident engine, ``engine="device"``) —
+                 same attrs as ``portfolio``
 ``repair``       ejection-chain repair of a near-complete solution
                  (includes the lazy row-cache unpack) — ``shortfall``
 ``validate``     `validate_mapping` replay of a candidate solution
@@ -74,7 +77,8 @@ from .export import (from_json, to_chrome_trace, to_json,
 #: The stable span-name vocabulary documented above.
 PHASES = (
     "map-dfg", "static-prepass", "schedule", "conflict-build", "certify",
-    "portfolio-init", "portfolio", "repair", "validate", "exact-csp",
+    "portfolio-init", "portfolio", "portfolio-device", "repair",
+    "validate", "exact-csp",
     "race", "race-side", "comap-region", "arbitrate", "merge-replay",
 )
 

@@ -55,6 +55,7 @@ from collections import OrderedDict
 
 from repro.core.bandmap import MappingResult
 from repro.core.cgra import CGRAConfig
+from repro.core.options import MapOptions
 from repro.core.validate import validate_mapping
 
 from .canon import CanonicalForm, relabel_result
@@ -68,10 +69,17 @@ def config_fingerprint(cgra: CGRAConfig) -> str:
         repr(dataclasses.astuple(cgra)).encode()).hexdigest()[:12]
 
 
-def options_fingerprint(options: dict) -> str:
-    """Stable short fingerprint of the `map_dfg` keyword arguments."""
-    return hashlib.sha256(
-        repr(sorted(options.items())).encode()).hexdigest()[:12]
+def options_fingerprint(options) -> str:
+    """Stable short fingerprint of the `map_dfg` options — a
+    `MapOptions` instance or a legacy option dict.
+
+    Delegates to `MapOptions.fingerprint`, whose sparse legacy-kwarg
+    rendering reproduces this function's historical
+    ``sha256(repr(sorted(dict.items())))[:12]`` byte-for-byte on every
+    option dict the serving scheduler produced (request options + a
+    resolved seed), so on-disk entries written before the `MapOptions`
+    migration still hit."""
+    return MapOptions.coerce(options).fingerprint()
 
 
 @dataclasses.dataclass
@@ -146,7 +154,8 @@ class MappingCache:
 
     # ------------------------------------------------------------- keys
     @staticmethod
-    def key(canon: CanonicalForm, cgra: CGRAConfig, options: dict) -> str:
+    def key(canon: CanonicalForm, cgra: CGRAConfig,
+            options: "MapOptions | dict") -> str:
         return (f"{canon.digest[:32]}-{config_fingerprint(cgra)}-"
                 f"{options_fingerprint(options)}")
 
@@ -155,7 +164,7 @@ class MappingCache:
 
     # ---------------------------------------------------------- lookup
     def lookup(self, canon: CanonicalForm, cgra: CGRAConfig,
-               options: dict) -> CacheHit | None:
+               options: "MapOptions | dict") -> CacheHit | None:
         """Return a validated (or soundly-negative) hit, else None.
 
         Every positive hit is replayed through the validator before
@@ -213,7 +222,7 @@ class MappingCache:
 
     # ----------------------------------------------------------- store
     def store(self, canon: CanonicalForm, cgra: CGRAConfig,
-              options: dict, result: MappingResult, *,
+              options: "MapOptions | dict", result: MappingResult, *,
               canonical: bool = False) -> str | None:
         """Store ``result`` under its canonical key; returns the key.
 

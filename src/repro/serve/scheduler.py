@@ -62,6 +62,7 @@ from repro.analysis import static_infeasibility
 from repro.core.bandmap import MappingResult, map_dfg
 from repro.core.cgra import CGRAConfig
 from repro.core.dfg import DFG
+from repro.core.options import MapOptions
 from repro.core.validate import validate_mapping
 
 from .cache import MappingCache
@@ -110,9 +111,15 @@ class RequestScheduler:
                  max_workers: int | None = None,
                  base_seed: int = 0) -> None:
         self.cache = cache
-        # The mapper is GIL-heavy python+numpy: oversubscribing cores
-        # slows every in-flight map and inflates tail latency, so the
-        # default pool matches the machine.
+        # The numpy portfolio is GIL-heavy python+numpy: oversubscribing
+        # cores slows every in-flight map and inflates tail latency, so
+        # the default pool matches the machine.  Requests running the
+        # device engine (``engine="device"``) spend their portfolio wall
+        # inside XLA dispatches that release the GIL but contend for the
+        # same cores (interpret mode) or the one accelerator — a
+        # device-heavy deployment should size the pool toward 1-2
+        # workers and lean on the engine's K-way internal parallelism
+        # instead of pool-level concurrency.
         self.max_workers = max_workers if max_workers is not None \
             else max(1, min(os.cpu_count() or 1, 8))
         self.base_seed = base_seed
@@ -121,7 +128,7 @@ class RequestScheduler:
     def run(self, requests: list[MapRequest]) -> list[ServeOutcome]:
         n = len(requests)
         canons: list[CanonicalForm] = [None] * n
-        effs: list[dict] = [None] * n
+        effs: list[MapOptions] = [None] * n
         outcomes: list[ServeOutcome | None] = [None] * n
         order = sorted(range(n),
                        key=lambda i: (requests[i].deadline, i))
@@ -238,7 +245,7 @@ class RequestScheduler:
                 # structure + options — see `canon.canonical_dfg`.
                 return pool.submit(
                     map_dfg, canonical_dfg(requests[i].dfg, canons[i]),
-                    requests[i].cgra, **effs[i])
+                    requests[i].cgra, effs[i])
 
             futs = {submit_solo(i): ("solo", i) for i in solo}
             futs.update(
@@ -305,7 +312,7 @@ class RequestScheduler:
 
     # --------------------------------------------------------- helpers
     def _static_reject(self, req: MapRequest, canon: "CanonicalForm",
-                       eff: dict) -> MappingResult | None:
+                       eff: MapOptions) -> MappingResult | None:
         """Static admission check on a cache miss (calling thread —
         the analyzer is schedule-free structure scanning).  A verdict
         is stored under the canonical key first — the sound negative
@@ -314,10 +321,10 @@ class RequestScheduler:
         ids for the outcome."""
         res = static_infeasibility(
             canonical_dfg(req.dfg, canon), req.cgra,
-            mode=eff.get("mode", "bandmap"),
-            max_ii=eff.get("max_ii", 32),
-            min_ii=eff.get("min_ii"),
-            max_bus_fanout=eff.get("max_bus_fanout"))
+            mode=eff.mode,
+            max_ii=eff.schedule.max_ii,
+            min_ii=eff.schedule.min_ii,
+            max_bus_fanout=eff.schedule.max_bus_fanout)
         if res is None:
             return None
         self.cache.store(canon, req.cgra, eff, res, canonical=True)
@@ -325,17 +332,21 @@ class RequestScheduler:
         return relabel_result(res, inv)
 
     def _solo_options(self, req: MapRequest,
-                      canon: CanonicalForm) -> dict:
+                      canon: CanonicalForm) -> MapOptions:
         """Per-request seed diversification: a pinned seed (in options
         or on the request) wins; otherwise the seed derives from the
         canonical digest — distinct problems explore distinct portfolio
         trajectories, while isomorphic requests reproduce the same run
         (which is what lets their results be shared soundly)."""
-        opts = dict(req.options)
-        if "seed" not in opts:
-            opts["seed"] = req.seed if req.seed is not None else \
-                (self.base_seed + int(canon.digest[:8], 16)) % (1 << 31)
-        return opts
+        if isinstance(req.options, MapOptions):
+            # Structured options carry an explicit seed — pinned.
+            return req.options
+        eff = MapOptions.coerce(req.options)
+        if "seed" not in req.options:
+            eff = eff.replace(
+                seed=req.seed if req.seed is not None else
+                (self.base_seed + int(canon.digest[:8], 16)) % (1 << 31))
+        return eff
 
     def _co_run(self, requests: list[MapRequest], idxs: list[int]
                 ) -> list[tuple[int, MappingResult | None]]:
@@ -349,16 +360,21 @@ class RequestScheduler:
 
         lead = requests[idxs[0]]
         cgra = lead.cgra
-        opts = dict(lead.options)
-        mode = opts.pop("mode", "bandmap")
-        max_ii = opts.pop("max_ii", 32)
-        min_ii = opts.pop("min_ii", None)
-        # Same precedence as solo requests: options seed, then the
-        # request-level pinned seed, then the scheduler default.
-        seed = opts.pop("seed", lead.seed if lead.seed is not None
-                        else self.base_seed)
-        cm = co_map([requests[i].dfg for i in idxs], cgra, mode=mode,
-                    max_ii=max_ii, min_ii=min_ii, seed=seed, **opts)
+        raw = dict(lead.options)
+        # ``rounds`` / ``grf_split`` are co-mapping knobs, not
+        # `MapOptions` fields — they ride the option dict on the wire
+        # and peel off here ("rounds" is not a mapping knob name, so
+        # the single-source lint rule does not apply).
+        co_kw = {k: raw.pop(k) for k in ("rounds", "grf_split")
+                 if k in raw}
+        eff = MapOptions.coerce(raw)
+        if "seed" not in raw:
+            # Same precedence as solo requests: options seed, then the
+            # request-level pinned seed, then the scheduler default.
+            eff = eff.replace(seed=lead.seed if lead.seed is not None
+                              else self.base_seed)
+        cm = co_map([requests[i].dfg for i in idxs], cgra,
+                    options=eff, **co_kw)
         out: list[tuple[int, MappingResult | None]] = []
         for j, i in enumerate(idxs):
             # A region result is only a *joint* placement when the whole

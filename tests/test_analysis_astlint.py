@@ -82,6 +82,19 @@ def f(tracer=None):
     if tracer:
         tracer.count("x")
 """, "src/repro/comap/comap.py"),
+    ("knob-subscript", "options-single-source", """
+def dispatch(req):
+    return run(iters=req.options["mis_iters"])
+""", "src/repro/serve/scheduler.py"),
+    ("knob-dict-get", "options-single-source", """
+def dispatch(opts):
+    return run(mode=opts.get("mode", "bandmap"))
+""", "src/repro/comap/comap.py"),
+    ("knob-dict-pop", "options-single-source", """
+def dispatch(opts):
+    seed = opts.pop("seed", 0)
+    return run(seed=seed)
+""", "src/repro/exact/race.py"),
 ]
 
 # Compliant twin under the SAME path scope: must produce no findings.
@@ -136,6 +149,27 @@ def plot(tracer):
     if tracer:
         draw(tracer.finished)
 """, "src/repro/analysis/plots.py"),
+    ("knob-membership-test-ok", """
+def solo(req):
+    eff = MapOptions.coerce(req.options)
+    if "seed" not in req.options:
+        eff = eff.replace(seed=7)
+    return eff
+""", "src/repro/serve/scheduler.py"),
+    ("knob-attribute-read-ok", """
+def dispatch(opts):
+    return run(iters=opts.portfolio.iters, mode=opts.mode)
+""", "src/repro/core/bandmap.py"),
+    ("knob-nonknob-key-ok", """
+def co(opts):
+    raw = dict(opts)
+    rounds = raw.pop("rounds", 4)
+    return rounds
+""", "src/repro/serve/scheduler.py"),
+    ("knob-rule-scoped-to-engine", """
+def plot(opts):
+    return opts["mis_iters"]
+""", "src/repro/analysis/plots.py"),
 ]
 
 
@@ -158,6 +192,14 @@ def test_all_rules_covered():
     """The seeded-violation fixtures exercise every named rule."""
     assert len(RULE_NAMES) >= 6
     assert {v[1] for v in VIOLATIONS} == set(RULE_NAMES)
+
+
+def test_knob_names_mirror_legacy_knobs():
+    """astlint never imports the linted package, so it carries its own
+    copy of the legacy knob names; the two sets must not drift."""
+    from repro.analysis.astlint import _KNOB_NAMES
+    from repro.core.options import LEGACY_KNOBS
+    assert _KNOB_NAMES == frozenset(LEGACY_KNOBS)
 
 
 def test_syntax_error_is_a_finding():

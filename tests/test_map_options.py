@@ -1,0 +1,189 @@
+"""`MapOptions` — the consolidated engine API.
+
+Three contracts: (1) the three call forms (structured `MapOptions`,
+option dict, legacy keywords) are interchangeable and bit-identical
+through `map_dfg`; (2) `MapOptions.fingerprint` is byte-compatible with
+the serve tier's historical option-dict hash, so on-disk cache entries
+written before the migration still hit; (3) the portfolio-init hotspot
+fix holds — the traced phase breakdown shows constructive-init/engine
+construction as a minority share of the mapping wall (it was the
+dominant pre-search cost on 16x16-scale graphs before the shared row
+cache).
+"""
+
+from __future__ import annotations
+
+import hashlib
+
+import pytest
+
+from repro.core import (CertifyOptions, MapOptions, PortfolioOptions,
+                        ScheduleOptions, make_cnkm, map_dfg,
+                        scale_16x16_loop)
+from repro.core.cgra import CGRAConfig
+from repro.core.mis import GroupMoveConfig
+from repro.core.options import LEGACY_KNOBS
+from repro.obs import Tracer
+from repro.serve.cache import MappingCache, options_fingerprint
+from repro.serve.canon import canonical_form
+
+CGRA = CGRAConfig()
+
+
+# ------------------------------------------------------------- adapters
+def test_three_call_forms_are_bit_identical():
+    dfg = make_cnkm(2, 6)
+    legacy = map_dfg(dfg, CGRA, seed=3, mis_iters=4000, mis_restarts=6)
+    structured = map_dfg(dfg, CGRA, MapOptions(
+        seed=3, portfolio=PortfolioOptions(iters=4000, restarts=6)))
+    wire = map_dfg(dfg, CGRA, {"seed": 3, "mis_iters": 4000,
+                               "mis_restarts": 6})
+    assert legacy.ii == structured.ii == wire.ii
+    assert legacy.placement == structured.placement == wire.placement
+    assert legacy.attempts == structured.attempts == wire.attempts
+
+
+def test_from_kwargs_routes_every_legacy_knob():
+    opts = MapOptions.from_kwargs(
+        mode="busmap", seed=9, backend="race", bus_pressure=False,
+        max_ii=8, min_ii=2, use_grf=True, max_bus_fanout=3,
+        certify=False, certify_budget=1000, n_exact_placements=2,
+        static_prepass=False, hall=False, exact_node_budget=500,
+        mis_restarts=3, mis_iters=100, engine="device", device_seeds=64,
+        group_move=True, row_cache_limit=1 << 20)
+    assert opts.mode == "busmap" and opts.seed == 9
+    assert opts.backend == "race" and opts.bus_pressure is False
+    assert opts.schedule == ScheduleOptions(max_ii=8, min_ii=2,
+                                            use_grf=True,
+                                            max_bus_fanout=3)
+    assert opts.certify == CertifyOptions(
+        enabled=False, budget=1000, n_exact_placements=2,
+        static_prepass=False, hall=False, exact_node_budget=500)
+    assert opts.portfolio.restarts == 3 and opts.portfolio.iters == 100
+    assert opts.portfolio.engine == "device"
+    assert opts.portfolio.device_seeds == 64
+    # group_move=True normalizes to the default config (False -> None).
+    assert opts.portfolio.group_move == GroupMoveConfig()
+    assert opts.portfolio.row_cache_limit == 1 << 20
+
+
+def test_round_trip_and_replace():
+    opts = MapOptions.from_kwargs(mode="busmap", max_ii=8, seed=4,
+                                  mis_iters=999)
+    assert MapOptions.from_kwargs(**opts.to_kwargs(sparse=False)) == opts
+    bumped = opts.replace(seed=5, certify_budget=10)
+    assert bumped.seed == 5 and bumped.certify.budget == 10
+    assert bumped.mode == "busmap"
+    assert bumped.schedule.max_ii == 8
+    assert bumped.portfolio.iters == 999
+
+
+def test_unknown_keys_warn_and_drop():
+    with pytest.warns(UserWarning, match="bogus"):
+        opts = MapOptions.from_kwargs(seed=1, bogus=2)
+    assert opts.seed == 1
+
+
+def test_coerce_rejects_mixed_and_bad_types():
+    with pytest.raises(TypeError, match="not both"):
+        MapOptions.coerce(MapOptions(), {"seed": 1})
+    with pytest.raises(TypeError, match="MapOptions"):
+        MapOptions.coerce(42)
+    with pytest.raises(ValueError, match="engine"):
+        PortfolioOptions(engine="fpga")
+
+
+# ---------------------------------------------------------- fingerprint
+def _historical_fp(d: dict) -> str:
+    """The serve tier's pre-migration formula, verbatim."""
+    return hashlib.sha256(
+        repr(sorted(d.items())).encode()).hexdigest()[:12]
+
+
+# Option dicts the serving scheduler historically produced: request
+# options (non-default knobs only — `serve_catalog` traces carry mode /
+# budgets / backend) + a resolved seed.
+SERVE_DICTS = [
+    {"seed": 7},
+    {"seed": 0},
+    {"mode": "busmap", "seed": 123456},
+    {"mode": "busmap", "max_ii": 8, "seed": 5},
+    {"backend": "race", "seed": 1},
+    {"mis_iters": 500, "mis_restarts": 4, "seed": 2},
+    {"certify_budget": 50_000, "max_bus_fanout": 4, "seed": 9},
+]
+
+
+@pytest.mark.parametrize("d", SERVE_DICTS,
+                         ids=[repr(sorted(d)) for d in SERVE_DICTS])
+def test_fingerprint_matches_historical_bytes(d):
+    """Cache keys survive the migration: the sparse legacy-kwarg
+    rendering hashes to the exact pre-`MapOptions` fingerprint."""
+    assert MapOptions.coerce(d).fingerprint() == _historical_fp(d)
+    assert options_fingerprint(d) == _historical_fp(d)
+    assert options_fingerprint(MapOptions.coerce(d)) == _historical_fp(d)
+
+
+def test_on_disk_entries_hit_across_option_forms(tmp_path):
+    """An entry stored under a legacy option dict is found by the
+    equivalent `MapOptions` lookup (and vice versa) — same key bytes."""
+    dfg = make_cnkm(2, 4)
+    d = {"mode": "busmap", "seed": 5}
+    res = map_dfg(dfg, CGRA, d)
+    assert res.ok
+    cache = MappingCache(art_dir=str(tmp_path))
+    canon = canonical_form(dfg)
+    key_dict = cache.store(canon, CGRA, d, res)
+    assert key_dict is not None
+    opts = MapOptions.coerce(d)
+    assert cache.key(canon, CGRA, opts) == key_dict
+    hit = MappingCache(art_dir=str(tmp_path)).lookup(canon, CGRA, opts)
+    assert hit is not None and hit.result.ok
+
+
+def test_fingerprint_ignores_explicit_defaults_not_seed():
+    base = MapOptions()
+    assert base.to_kwargs() == {"seed": 0}
+    assert MapOptions.coerce({"seed": 3}).fingerprint() == \
+        MapOptions(seed=3).fingerprint()
+    assert MapOptions(seed=3).fingerprint() != \
+        MapOptions(seed=4).fingerprint()
+
+
+def test_legacy_knobs_cover_every_field():
+    """Every dataclass field is reachable from exactly one legacy name
+    (the adapter cannot silently orphan a knob)."""
+    import dataclasses
+    seen = set()
+    for group, field in LEGACY_KNOBS.values():
+        holder = {None: MapOptions, "schedule": ScheduleOptions,
+                  "certify": CertifyOptions,
+                  "portfolio": PortfolioOptions}[group]
+        assert field in {f.name for f in dataclasses.fields(holder)}
+        seen.add((group, field))
+    assert len(seen) == len(LEGACY_KNOBS)
+    n_fields = sum(
+        1 for cls in (ScheduleOptions, CertifyOptions, PortfolioOptions)
+        for _ in dataclasses.fields(cls)) + 4  # mode/seed/backend/bus_p
+    assert len(seen) == n_fields
+
+
+# ------------------------------------------------------ hotspot regression
+def test_portfolio_init_no_longer_dominates():
+    """PR-8 profiling put portfolio-init (constructive warm starts +
+    per-round engine construction, each re-unpacking n^2 adjacency
+    rows) at ~2/3 of the 16x16-scale mapping wall.  With the row cache
+    memoized on the conflict graph and `greedy_mis` decrementing
+    degrees from killed rows only, init must be a minority share."""
+    big = CGRAConfig(rows=16, cols=16)
+    dfg = scale_16x16_loop(n_chains=4, chain_len=4)
+    tr = Tracer()
+    res = map_dfg(dfg, big, max_bus_fanout=4, mis_restarts=4,
+                  mis_iters=400, certify=False, static_prepass=False,
+                  min_ii=5, tracer=tr)
+    assert res.ok
+    walls: dict[str, float] = {}
+    for rec in tr.finished:
+        walls[rec.name] = walls.get(rec.name, 0.0) + (rec.t1 - rec.t0)
+    total = walls["map-dfg"]
+    assert walls["portfolio-init"] < 0.5 * total, walls

@@ -1,0 +1,174 @@
+"""Differential suite for the accelerator-resident portfolio engine
+(`core.mis_device.DeviceSBTS`, vmapped Pallas SBTS in interpret mode on
+CPU).
+
+The numpy `mis.PortfolioSBTS` stays the oracle: on every paper kernel
+and every workload family (small sizes) the device engine must produce
+independent sets only, and reach equal-or-better best coverage at an
+equal per-seed lock-step iteration budget.  On top of the differential:
+the counter-based RNG (`jax.random.fold_in` streams keyed on
+(seed, trajectory, iteration)) makes runs bit-reproducible and
+resume-safe — `run(a); run(b)` lands in the same state as `run(a+b)` —
+and the tabu guard is asserted step-by-step with single-iteration
+chunks.  End-to-end, ``engine="device"`` must reproduce the golden
+(II, routing-PE) table bit-for-bit through `map_dfg`'s harvest loop.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import MapOptions, PortfolioOptions, map_dfg
+from repro.core.bitset import pack_bool
+from repro.core.cgra import CGRAConfig
+from repro.core.conflict import build_conflict_graph
+from repro.core.kernels_cnkm import PAPER_KERNELS, cnkm_name, make_cnkm
+from repro.core.mis_device import DeviceSBTS, differential_vs_numpy
+from repro.core.schedule import mii, schedule_dfg
+from repro.core.workloads import FAMILIES
+
+from test_golden_results import GOLDEN, SLOW
+
+CGRA = CGRAConfig()
+
+# Small instances, one per workload family (the generators' smallest
+# interesting shapes — the differential is about engine parity, not
+# scale).
+FAMILY_CASES = {
+    "loop": dict(n_chains=2, chain_len=3),
+    "stencil": dict(points=3, taps=2),
+    "reduction": dict(width=4),
+    "cnkm": dict(n=2, m=4),
+    "tight": dict(n_vios=2, fanout=4),
+}
+
+
+def _conflict_graph(dfg, cgra):
+    """First schedulable (II, jitter=0) combination's conflict graph."""
+    start = mii(dfg, cgra)
+    for ii in range(start, start + 6):
+        try:
+            sched = schedule_dfg(dfg, cgra, mode="bandmap", ii=ii,
+                                 max_ii=ii, jitter=0, seed=0)
+        except RuntimeError:
+            continue
+        return build_conflict_graph(sched, cgra), len(sched.dfg.ops)
+    raise AssertionError("no schedulable II found")
+
+
+def _assert_differential(dfg):
+    cg, n_ops = _conflict_graph(dfg, CGRA)
+    res = differential_vs_numpy(cg.bits, iters=256, k=4, seed=0,
+                                target=n_ops)
+    assert res["device_independent"], res
+    assert res["numpy_independent"], res
+    assert res["device_cov"] >= res["numpy_cov"], res
+
+
+@pytest.mark.parametrize(
+    "n,m", PAPER_KERNELS, ids=[cnkm_name(n, m) for n, m in PAPER_KERNELS])
+def test_differential_paper_kernel(n, m):
+    _assert_differential(make_cnkm(n, m))
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_differential_workload_family(family):
+    assert family in FAMILY_CASES, f"new family {family!r}: add a case"
+    _assert_differential(FAMILIES[family](**FAMILY_CASES[family]))
+
+
+# --------------------------------------------------- engine invariants
+def _small_graph():
+    cg, n_ops = _conflict_graph(make_cnkm(2, 6), CGRA)
+    return cg.bits, n_ops
+
+
+def test_counter_rng_is_reproducible():
+    """Two engines built from the same (graph, seed, K) advance through
+    identical states — the fold_in streams are pure functions of
+    (seed, trajectory, iteration), with no hidden host RNG."""
+    g, _ = _small_graph()
+    a = DeviceSBTS(g, k=4, seed=11)
+    b = DeviceSBTS(g, k=4, seed=11)
+    a.run(96)
+    b.run(96)
+    np.testing.assert_array_equal(a.best, b.best)
+    np.testing.assert_array_equal(a.in_s, b.in_s)
+    np.testing.assert_array_equal(a.tabu, b.tabu)
+    np.testing.assert_array_equal(a.best_size, b.best_size)
+
+
+def test_resume_is_bit_identical_to_one_shot():
+    """run(32) + run(64) == run(96): the iteration counter keys the RNG
+    streams, so splitting the budget cannot change any trajectory."""
+    g, _ = _small_graph()
+    split = DeviceSBTS(g, k=4, seed=5)
+    whole = DeviceSBTS(g, k=4, seed=5)
+    split.run(32)
+    split.run(64)
+    whole.run(96)
+    assert split.it == whole.it == 96
+    np.testing.assert_array_equal(split.in_s, whole.in_s)
+    np.testing.assert_array_equal(split.best, whole.best)
+    np.testing.assert_array_equal(split.tabu, whole.tabu)
+
+
+def test_every_best_is_an_independent_set():
+    g, _ = _small_graph()
+    dev = DeviceSBTS(g, k=8, seed=3)
+    dev.run(128)
+    for row in dev.best:
+        assert not g.any_conflict(pack_bool(row))
+    for row in dev.in_s[:, :g.n]:
+        assert not g.any_conflict(pack_bool(row))
+
+
+def test_tabu_is_respected_step_by_step():
+    """Single-iteration chunks expose every transition: a vertex may
+    only *enter* a working set while its tabu expiry is <= the
+    iteration counter (swap evictions push expiries into the future,
+    and the add/swap selection must honor them)."""
+    g, _ = _small_graph()
+    dev = DeviceSBTS(g, k=4, seed=9, chunk=1)
+    saw_tabu = False
+    for _ in range(80):
+        before = dev.in_s.copy()
+        tabu = dev.tabu.copy()
+        it = dev.it
+        dev.run(1)
+        entered = dev.in_s & ~before
+        assert not (entered & (tabu > it)).any(), \
+            f"tabu-active vertex re-entered at it={it}"
+        saw_tabu = saw_tabu or (dev.tabu > dev.it).any()
+    assert saw_tabu, "80 iterations never produced an active tabu entry"
+
+
+def test_rearm_and_reset_keep_invariants():
+    g, n_ops = _small_graph()
+    dev = DeviceSBTS(g, k=4, seed=2)
+    dev.run(64)
+    dev.rearm(0)
+    dev.reset_seed(1)
+    assert dev.best_size[1] == 0
+    dev.run(64, target=n_ops)
+    for row in dev.best:
+        assert not g.any_conflict(pack_bool(row))
+
+
+# ------------------------------------------------------------ end-to-end
+DEVICE_GOLDEN = [case for case in GOLDEN if case not in SLOW]
+
+
+@pytest.mark.parametrize("n,m,mode", DEVICE_GOLDEN)
+def test_golden_pairs_unchanged_with_device_engine(n, m, mode):
+    """`engine="device"` feeds the same dedupe -> repair -> validate
+    harvest loop, so the golden (II, routing-PE) table must hold
+    end-to-end (the schedule side is untouched; only the MIS search
+    runs on-device)."""
+    opts = MapOptions(mode=mode, portfolio=PortfolioOptions(
+        engine="device", device_seeds=32, iters=4000))
+    r = map_dfg(make_cnkm(n, m), CGRA, opts)
+    assert r.ok, f"{cnkm_name(n, m)}:{mode} failed: {r.summary()}"
+    assert (r.ii, r.n_routing_pes) == GOLDEN[(n, m, mode)], r.summary()
+    assert r.mis_size == r.n_ops

@@ -123,10 +123,10 @@ def test_admission_is_keyed_on_the_proof_flag():
     assert not base.ok and base.proved_infeasible
     canon = canonical_form(make_cnkm(5, 5))
     proof = dataclasses.replace(base, attempts=17)
-    assert cache.store(canon, CGRA, {"v": 1}, proof) is not None
+    assert cache.store(canon, CGRA, {"seed": 1}, proof) is not None
     unsound = dataclasses.replace(base, attempts=17,
                                   proved_infeasible=False)
-    assert cache.store(canon, CGRA, {"v": 2}, unsound) is None
+    assert cache.store(canon, CGRA, {"seed": 2}, unsound) is None
     assert cache.stats.neg_uncacheable == 1
 
 
