@@ -230,16 +230,26 @@ def bench_kernel_table(quick: bool = False) -> list[dict]:
     traced per-phase wall breakdown and the deterministic engine
     counters `check_regression.py` gates (CSP nodes and portfolio
     iterations are seed-determined, so they gate far tighter than the
-    noisy walls)."""
-    from repro.obs import Tracer
+    noisy walls).
 
+    Every run is recorded under a live `FlightRecorder` — flight-on is
+    the production default, so its overhead deliberately rides these
+    walls and the existing regression gate.  The per-run flight dumps
+    and Perfetto traces land in ``artifacts/bench/`` for the nightly
+    workflow to upload."""
+    from repro.obs import FlightRecorder, Tracer, write_chrome_trace
+
+    trace_dir = os.path.join(ART, "traces")
+    os.makedirs(trace_dir, exist_ok=True)
+    flights: dict[str, list] = {}
     rows = []
     kw = dict(mis_restarts=4, mis_iters=8000, max_ii=8) if quick else {}
     for (n, m) in PAPER_KERNELS:
         for mode in ("bandmap", "busmap"):
             tr = Tracer()
+            rec = FlightRecorder()
             r = map_dfg(make_cnkm(n, m), CGRAConfig(), mode=mode,
-                        tracer=tr, **kw)
+                        tracer=tr, record=rec, **kw)
             phases = {name: dict(count=agg["count"],
                                  total_s=round(agg["total_s"], 4))
                       for name, agg in tr.phase_breakdown().items()}
@@ -256,6 +266,13 @@ def bench_kernel_table(quick: bool = False) -> list[dict]:
                     portfolio_iters=int(
                         counters.get("portfolio.iters", 0)))))
             print(f"kernel_table: {rows[-1]}")
+            label = f"{cnkm_name(n, m)}_{mode}"
+            flights[label] = list(rec.dump())
+            write_chrome_trace(
+                tr, os.path.join(trace_dir, f"{label}.json"),
+                process_name=label)
+    with open(os.path.join(ART, "flight_kernel_table.json"), "w") as f:
+        json.dump(flights, f, indent=1)
     return rows
 
 
@@ -475,27 +492,34 @@ def bench_device_engine(quick: bool = False) -> list[dict]:
     bound the worst case, not accelerator throughput."""
     from repro.core.mis import PortfolioSBTS
     from repro.core.mis_device import DeviceSBTS
+    from repro.obs import Tracer
 
     iters = 48
     rows = []
     big = CGRAConfig(rows=8, cols=8)
     cg, n_ops = _device_graph(make_cnkm(4, 8), big)
     t0 = time.perf_counter()
+    tr = Tracer()
     ref = PortfolioSBTS(cg.bits, [None] * 8, seed=0)
-    ref.run(iters, target=n_ops)
+    ref.run(iters, target=n_ops, tracer=tr)
     rows.append(dict(
         kernel="C4K8@8x8", mode="numpy_k8", v_c=cg.n, k=8, iters=iters,
         coverage=f"{int(ref.best_size.max())}/{n_ops}",
+        counters=dict(portfolio_iters=int(
+            tr.counter_value("portfolio.iters"))),
         wall_s=round(time.perf_counter() - t0, 3)))
     print(f"device_engine: {rows[-1]}")
     for k in (32, 256) if quick else (32, 256, 1024):
         t0 = time.perf_counter()
+        tr = Tracer()
         dev = DeviceSBTS(cg.bits, k=k, seed=0)
-        dev.run(iters, target=n_ops)
+        dev.run(iters, target=n_ops, tracer=tr)
         rows.append(dict(
             kernel="C4K8@8x8", mode=f"device_k{k}", v_c=cg.n, k=k,
             iters=iters,
             coverage=f"{int(dev.best_size.max())}/{n_ops}",
+            counters=dict(portfolio_iters=int(
+                tr.counter_value("portfolio.iters"))),
             wall_s=round(time.perf_counter() - t0, 3)))
         print(f"device_engine: {rows[-1]}")
     if not quick:
@@ -507,15 +531,18 @@ def bench_device_engine(quick: bool = False) -> list[dict]:
         for mode, engine, k in (("numpy_k4", PortfolioSBTS, 4),
                                 ("device_k64", DeviceSBTS, 64)):
             t0 = time.perf_counter()
+            tr = Tracer()
             if engine is PortfolioSBTS:
                 eng = PortfolioSBTS(cg16.bits, [None] * k, seed=0)
             else:
                 eng = DeviceSBTS(cg16.bits, k=k, seed=0)
-            eng.run(iters, target=n16)
+            eng.run(iters, target=n16, tracer=tr)
             rows.append(dict(
                 kernel="loop16@16x16", mode=mode, v_c=cg16.n, k=k,
                 iters=iters,
                 coverage=f"{int(eng.best_size.max())}/{n16}",
+                counters=dict(portfolio_iters=int(
+                    tr.counter_value("portfolio.iters"))),
                 wall_s=round(time.perf_counter() - t0, 3)))
             print(f"device_engine: {rows[-1]}")
     return rows

@@ -32,15 +32,24 @@ slower (never tightened when it is faster).
 
 Counter gate
 ------------
-Rows carrying a ``counters`` dict (kernel_table does, via the traced
-`repro.obs` run) are additionally gated on each counter's value —
-certify CSP nodes and portfolio iterations today.  These are
-seed-determined and machine-independent, so the gate is *tighter* than
-the wall gate (``--counter-factor``, default 1.25, no machine-speed
-scaling) with its own absolute floor (``--counter-floor``, default 500:
-a jump from 10 to 40 nodes is noise-free but meaningless).  A counter
-present in the baseline row but absent from the fresh row fails — an
-engine path silently lost its instrumentation.
+Rows carrying a ``counters`` dict (kernel_table and device_engine do,
+via the traced `repro.obs` runs) are additionally gated on each
+counter's value — certify CSP nodes and portfolio iterations today.
+These are seed-determined and machine-independent, so the gate is
+*tighter* than the wall gate (``--counter-factor``, default 1.25, no
+machine-speed scaling) with its own absolute floor
+(``--counter-floor``, default 500: a jump from 10 to 40 nodes is
+noise-free but meaningless).  A counter present in the baseline row
+but absent from the fresh row fails — an engine path silently lost its
+instrumentation.
+
+Phase-presence gate
+-------------------
+Rows carrying a ``phases`` breakdown (kernel_table) are checked for
+*presence*: a phase recorded in the baseline row but absent from the
+fresh row fails the same instrumentation-loss way.  Per-phase walls
+are NOT value-gated — they are sub-second slices where scheduler noise
+dominates; the row's total wall already rides the wall gate.
 """
 
 from __future__ import annotations
@@ -70,6 +79,17 @@ def _counter_rows(bench: dict) -> dict[tuple, float]:
         for row in bench.get(section, []):
             for name, value in (row.get("counters") or {}).items():
                 out[(section, row["kernel"], row["mode"], name)] = value
+    return out
+
+
+def _phase_names(bench: dict) -> set[tuple]:
+    """(section, kernel, mode, phase) for every row that carries a
+    traced ``phases`` breakdown — presence only (see module docstring)."""
+    out = set()
+    for section in SECTIONS:
+        for row in bench.get(section, []):
+            for name in (row.get("phases") or {}):
+                out.add((section, row["kernel"], row["mode"], name))
     return out
 
 
@@ -123,6 +143,20 @@ def check(baseline: dict, fresh: dict, factor: float = 2.0,
             failures.append(
                 f"{label}: {old_c[key]:.0f} -> {new_c[key]:.0f} "
                 f"exceeds {counter_factor}x counter budget")
+    # Phase-presence gate: a traced phase that vanished from a row the
+    # baseline recorded it on is lost instrumentation, not noise.  Only
+    # rows present on both sides participate (retired kernels are the
+    # wall gate's "note", not a failure).
+    old_p, new_p = _phase_names(baseline), _phase_names(fresh)
+    fresh_rows = _rows(fresh)
+    for key in sorted(old_p - new_p):
+        section, kernel, mode, name = key
+        if (section, kernel, mode) not in fresh_rows:
+            continue
+        failures.append(
+            f"{section}:{kernel}:{mode}: phase {name!r} present in "
+            f"baseline but missing from fresh run — phase "
+            f"instrumentation silently lost")
     return failures
 
 

@@ -10,6 +10,11 @@ Two workloads, deliberately different phase profiles:
   kick on): the portfolio harvest rounds dominate, and the coverage
   gauge shows the kick breaking the stall.
 
+A third leg demos the rest of the observability surface: a
+flight-recorded failure rendered as an explain report
+(`MappingResult.explain()`), and a small serve batch's Prometheus
+exposition + JSONL access log (`serve.MappingService`).
+
 Open the written ``.trace.json`` files at https://ui.perfetto.dev (or
 chrome://tracing) to see the span timelines.
 
@@ -21,8 +26,10 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import (CGRAConfig, cnkm_name, make_cnkm,  # noqa: E402
-                        make_tightly_coupled, map_dfg)
-from repro.obs import Tracer, write_chrome_trace           # noqa: E402
+                        make_request_trace, make_tightly_coupled,
+                        map_dfg)
+from repro.obs import (FlightRecorder, Tracer,             # noqa: E402
+                       write_chrome_trace)
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts",
                    "trace")
@@ -72,6 +79,33 @@ def main() -> None:
         print(f"wrote {os.path.relpath(path)} "
               f"(open at https://ui.perfetto.dev)")
         _print_breakdown(name, tracer)
+
+    explain_and_serve_demo()
+
+
+def explain_and_serve_demo() -> None:
+    """Explain report on a flight-recorded infeasibility proof, then a
+    small serve batch's Prometheus + access-log exposition."""
+    from repro.serve import MappingService, MapRequest
+
+    print("\n--- explain report (proved-infeasible C2K8 BusMap) ---")
+    rec = FlightRecorder()
+    res = map_dfg(make_cnkm(2, 8), CGRAConfig(), mode="busmap",
+                  max_ii=2, record=rec)
+    print(res.explain().render())
+
+    print("\n--- serve exposition (8-request Zipf batch) ---")
+    svc = MappingService(shard="demo", trace_sample=0.25)
+    trace = make_request_trace(8, scale="4x4", seed=3)
+    svc.map_batch([MapRequest(dfg=t.dfg, cgra=CGRAConfig(),
+                              deadline=t.deadline, req_id=f"r{i}")
+                   for i, t in enumerate(trace)])
+    print(svc.prometheus(), end="")
+    print("access log (last 3 lines):")
+    for entry in svc.access_log.tail(3):
+        print(f"  {entry}")
+    print(f"sampled traces: {len(svc.traces)} "
+          f"(head-sampled at rate {svc.trace_sample})")
 
 
 if __name__ == "__main__":

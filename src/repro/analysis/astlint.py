@@ -56,6 +56,14 @@ tests/test_analysis_astlint.py):
     the exact identity checks ``tracer is None`` / ``tracer is not
     None`` — the engine must never branch on trace *content*.
 
+``recorder-default-none``
+    The flight-recorder twin of ``tracer-default-none``, over the same
+    engine modules: every function accepting a ``record`` parameter
+    (`repro.obs.FlightRecorder`) must default it to ``None`` and only
+    reference it in conditions through the identity None-checks — a
+    ``record=None`` run stays bit-identical (NullFlightRecorder
+    contract), and the engine never branches on recorded events.
+
 ``options-single-source``
     In the engine modules behind the `MapOptions` facade
     (``core/bandmap.py``, ``exact/backend.py``, ``exact/race.py``,
@@ -109,7 +117,7 @@ _KNOB_NAMES = frozenset({
 # removing or reordering MappingResult fields requires bumping the
 # version in bandmap.py AND adding the new pair here — that is the
 # point: the diff becomes impossible to make silently.
-_SERIAL_PINS = {2: "be396c8aa0fcae06"}
+_SERIAL_PINS = {2: "be396c8aa0fcae06", 3: "9b6f3df493a0e85e"}
 
 _WALLCLOCK_CALLS = {("time", "time"), ("time", "perf_counter"),
                     ("time", "monotonic"), ("time", "time_ns"),
@@ -370,22 +378,26 @@ def _rule_no_wallclock_canonical(tree, rel, out):
                 f"canonical-path module (seed a default_rng instead)"))
 
 
-def _rule_tracer_default_none(tree, rel, out):
-    if not rel.endswith(_TRACER_MODULES):
-        return
+def _check_handle_default_none(tree, rel, out, *, param: str,
+                               rule: str, null_name: str,
+                               noun: str) -> None:
+    """Shared body of the ``tracer-default-none`` /
+    ``recorder-default-none`` twins: the ``param`` parameter must
+    default to None, and conditions may only reference it through the
+    exact identity checks ``param is None`` / ``param is not None``."""
 
     def is_identity_none_check(test: ast.AST) -> bool:
         return (isinstance(test, ast.Compare)
                 and isinstance(test.left, ast.Name)
-                and test.left.id == "tracer"
+                and test.left.id == param
                 and len(test.ops) == 1
                 and isinstance(test.ops[0], (ast.Is, ast.IsNot))
                 and len(test.comparators) == 1
                 and isinstance(test.comparators[0], ast.Constant)
                 and test.comparators[0].value is None)
 
-    def mentions_tracer(node: ast.AST) -> bool:
-        return any(isinstance(n, ast.Name) and n.id == "tracer"
+    def mentions_param(node: ast.AST) -> bool:
+        return any(isinstance(n, ast.Name) and n.id == param
                    for n in ast.walk(node))
 
     for node in ast.walk(tree):
@@ -397,34 +409,51 @@ def _rule_tracer_default_none(tree, rel, out):
                 (a, d) for a, d in zip(args.kwonlyargs,
                                        args.kw_defaults)]
             for a in pos[:n_required]:
-                if a.arg == "tracer":
+                if a.arg == param:
                     out.append(AstFinding(
-                        rel, node.lineno, "tracer-default-none",
-                        f"function {node.name!r} takes `tracer` "
+                        rel, node.lineno, rule,
+                        f"function {node.name!r} takes `{param}` "
                         f"without a default — engine entry points "
-                        f"must default it to None (NullTracer "
+                        f"must default it to None ({null_name} "
                         f"contract)"))
             for a, d in pairs:
-                if a.arg == "tracer" and not (
+                if a.arg == param and not (
                         isinstance(d, ast.Constant)
                         and d.value is None):
                     out.append(AstFinding(
-                        rel, node.lineno, "tracer-default-none",
-                        f"function {node.name!r} defaults `tracer` to "
-                        f"something other than None — untraced runs "
+                        rel, node.lineno, rule,
+                        f"function {node.name!r} defaults `{param}` to "
+                        f"something other than None — un{noun}d runs "
                         f"must stay bit-identical"))
         tests: list[ast.AST] = []
         if isinstance(node, (ast.If, ast.While, ast.IfExp,
                              ast.Assert)):
             tests.append(node.test)
         for test in tests:
-            if mentions_tracer(test) and \
+            if mentions_param(test) and \
                     not is_identity_none_check(test):
                 out.append(AstFinding(
-                    rel, node.lineno, "tracer-default-none",
-                    "condition references `tracer` beyond the identity "
-                    "None-check — the engine must not branch on trace "
-                    "content"))
+                    rel, node.lineno, rule,
+                    f"condition references `{param}` beyond the "
+                    f"identity None-check — the engine must not "
+                    f"branch on {noun} content"))
+
+
+def _rule_tracer_default_none(tree, rel, out):
+    if not rel.endswith(_TRACER_MODULES):
+        return
+    _check_handle_default_none(tree, rel, out, param="tracer",
+                               rule="tracer-default-none",
+                               null_name="NullTracer", noun="trace")
+
+
+def _rule_recorder_default_none(tree, rel, out):
+    if not rel.endswith(_TRACER_MODULES):
+        return
+    _check_handle_default_none(tree, rel, out, param="record",
+                               rule="recorder-default-none",
+                               null_name="NullFlightRecorder",
+                               noun="record")
 
 
 def _rule_options_single_source(tree, rel, out):
@@ -456,11 +485,12 @@ def _rule_options_single_source(tree, rel, out):
 _RULES = (_rule_mapping_result_ok, _rule_cancel_poll,
           _rule_serial_version_pin, _rule_lock_guarded_state,
           _rule_no_wallclock_canonical, _rule_tracer_default_none,
-          _rule_options_single_source)
+          _rule_recorder_default_none, _rule_options_single_source)
 
 RULE_NAMES = ("mapping-result-ok", "cancel-poll", "serial-version-pin",
               "lock-guarded-state", "no-wallclock-canonical",
-              "tracer-default-none", "options-single-source")
+              "tracer-default-none", "recorder-default-none",
+              "options-single-source")
 
 
 # ------------------------------------------------------------------ api

@@ -38,6 +38,7 @@ from repro.core.options import MapOptions
 from repro.core.schedule import ScheduledDFG, mii
 from repro.core.validate import ValidationReport, validate_mapping
 from repro.core.workloads import op_weight
+from repro.obs.flight import recording
 from repro.obs.trace import live
 
 from .arbiter import ArbiterReport, arbitrate, merge_mappings
@@ -59,6 +60,10 @@ class CoMapResult:
     arbiter: ArbiterReport | None
     attempts: int                    # co-mapping rounds spent
     wall_s: float
+    # Flight-recorder dump (see `repro.obs.flight`) attached to failed
+    # runs mapped under a live recorder — same contract as
+    # `MappingResult.flight`.
+    flight: tuple = ()
 
     @property
     def n_kernels(self) -> int:
@@ -76,7 +81,7 @@ class CoMapResult:
 def co_map(dfgs: list[DFG], cgra: CGRAConfig,
            options: "MapOptions | dict | None" = None, *,
            rounds: int = 4, grf_split: bool = True, tracer=None,
-           **kwargs) -> CoMapResult:
+           record=None, **kwargs) -> CoMapResult:
     """Co-map ``dfgs`` onto ``cgra``; see the module docstring.
 
     Mapping knobs take the same `MapOptions` / dict / legacy-keyword
@@ -93,11 +98,15 @@ def co_map(dfgs: list[DFG], cgra: CGRAConfig,
     same floor it would pass to `map_dfg`).  ``tracer`` (default None)
     records per-region "comap-region" spans, "arbitrate"/"merge-replay"
     spans and the ``comap.arbitration_retries`` counter; see
-    `repro.obs`."""
+    `repro.obs`.  ``record`` (default None) is the flight-recorder
+    twin: "comap-round"/"comap-arbitrate" events land in the shared
+    ring (each region run also records its own engine events into it),
+    and a failed run returns with ``result.flight`` attached."""
     opts = MapOptions.coerce(options, kwargs)
     seed = opts.seed
     max_ii, min_ii = opts.schedule.max_ii, opts.schedule.min_ii
     trc = live(tracer)
+    rec = recording(record)
     t0 = _time.perf_counter()
     k = len(dfgs)
     if k == 0:
@@ -127,8 +136,11 @@ def co_map(dfgs: list[DFG], cgra: CGRAConfig,
                         options=opts.replace(
                             min_ii=ii_star, max_ii=ii_star,
                             seed=seed + 131 * rnd + 17 * i),
-                        tracer=tracer)
+                        tracer=tracer, record=record)
                     sp.set(ok=results[i].ok)
+            rec.emit("comap-round", ii=ii_star, round=rnd,
+                     ok_regions=sum(1 for r in results
+                                    if r is not None and r.ok))
             if not all(r is not None and r.ok for r in results):
                 # Some region cannot bind at this common II at all —
                 # re-seeding the others cannot fix that; escalate.
@@ -136,6 +148,8 @@ def co_map(dfgs: list[DFG], cgra: CGRAConfig,
             with trc.span("arbitrate", round=rnd, ii=ii_star) as asp:
                 arb = arbitrate(regions, results, cgra)
                 asp.set(ok=arb.ok)
+            rec.emit("comap-arbitrate", ii=ii_star, round=rnd,
+                     ok=arb.ok)
             last_arb = arb
             if not arb.ok:
                 trc.count("comap.arbitration_retries")
@@ -160,10 +174,13 @@ def co_map(dfgs: list[DFG], cgra: CGRAConfig,
             stale = set(arb.advisory_implicated) or set(range(k))
 
     merged_sched, placement = last_merged
+    flight: tuple = ()
+    if record is not None:
+        flight = record.dump()
     return CoMapResult(
         ok=False,
         ii=next((r.ii for r in results if r is not None), -1),
         regions=regions, region_cfgs=cfgs, results=results,
         sched=merged_sched, placement=placement, report=last_report,
         arbiter=last_arb, attempts=attempts,
-        wall_s=_time.perf_counter() - t0)
+        wall_s=_time.perf_counter() - t0, flight=flight)

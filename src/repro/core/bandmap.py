@@ -14,6 +14,7 @@ import time as _time
 
 import numpy as np
 
+from repro.obs.flight import recording
 from repro.obs.trace import live
 
 from .certify import IICertificate, certify_ii_infeasible
@@ -62,6 +63,13 @@ class MappingResult:
     optimal: bool = False
     proved_infeasible: bool = False
     backend: str = "portfolio"
+    # Flight-recorder dump (JSON-able event dicts, `repro.obs.flight`)
+    # attached by `map_dfg` to every ok=False result mapped under a
+    # live recorder — the last-N structured events (attempts,
+    # certificates, harvest coverage, cancel) a postmortem needs
+    # without a traced re-run.  Empty on successes and `record=None`
+    # runs, so the common positive path stays lean.
+    flight: tuple = ()
 
     @property
     def ii_ratio(self) -> float:
@@ -75,7 +83,8 @@ class MappingResult:
     # cache's on-disk artifacts (`serve.cache`) against silently loading
     # results written by an incompatible result layout.
     # v2: optimal / proved_infeasible / backend fields (exact backend).
-    SERIAL_VERSION = 2
+    # v3: flight field (obs flight-recorder dump on failed results).
+    SERIAL_VERSION = 3
 
     def to_bytes(self) -> bytes:
         import pickle
@@ -98,10 +107,23 @@ class MappingResult:
                 f"|V_C|={self.cg_size[0]}, |E_C|={self.cg_size[1]}, "
                 f"ok={self.ok}")
 
+    def explain(self, *, tracer=None, flight=None):
+        """Narrated report of *why* the mapping landed here: the II
+        escalation path with per-II cause (static floor / certificate
+        stage / portfolio exhaustion), routing-PE accounting, coverage
+        curve and race outcome.  Returns `repro.obs.ExplainReport`;
+        pass the run's ``tracer`` for the coverage/kick detail (the
+        result alone carries certificates and any attached flight
+        dump).  Imported lazily — `repro.obs.explain` must not be a
+        dependency of constructing results."""
+        from repro.obs.explain import explain_result
+        return explain_result(self, tracer=tracer, flight=flight)
+
 
 def map_dfg(dfg: DFG, cgra: CGRAConfig,
             options: "MapOptions | dict | None" = None, *,
-            cancel=None, tracer=None, **kwargs) -> MappingResult:
+            cancel=None, tracer=None, record=None,
+            **kwargs) -> MappingResult:
     """Run the full 4-phase mapping.  Phase 4 (incomplete-mapping
     processing) = MIS restarts with fresh seeds, re-scheduling with jitter
     (ASAP schedules are II-invariant, so jitter supplies the diversity),
@@ -155,9 +177,16 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig,
     cancelled run returns its best-effort ``ok=False`` result.
     ``tracer`` (`repro.obs.Tracer`, default None) records the run as a
     span tree — "map-dfg" at the root, per-phase children (see
-    `repro.obs` for the stable span taxonomy).  Both defaults are
-    bit-identical to the flag-less engine (NullTracer contract,
-    enforced by the ``tracer-default-none`` AST lint rule)."""
+    `repro.obs` for the stable span taxonomy).  ``record``
+    (`repro.obs.FlightRecorder`, default None) records the run's
+    structured event stream into a bounded ring — cheap enough for
+    production serving — and its `dump()` is attached as
+    ``result.flight`` to every ``ok=False`` result, so failures carry
+    their own postmortem.  All three defaults are bit-identical to the
+    flag-less engine (NullTracer / NullFlightRecorder contracts,
+    enforced by the ``tracer-default-none`` and
+    ``recorder-default-none`` AST lint rules); like ``tracer``,
+    ``record`` is a runtime handle, never a fingerprinted knob."""
     opts = MapOptions.coerce(options, kwargs)
     if opts.backend != "portfolio":
         from repro.exact import exact_map_dfg, race_map_dfg
@@ -166,19 +195,30 @@ def map_dfg(dfg: DFG, cgra: CGRAConfig,
                                  tracer=tracer)
         if opts.backend == "race":
             return race_map_dfg(dfg, cgra, options=opts, cancel=cancel,
-                                tracer=tracer)
+                                tracer=tracer, record=record)
         raise ValueError(f"unknown mapping backend {opts.backend!r}")
+    rec = recording(record)
+    rec.emit("phase-begin", phase="map-dfg", mode=opts.mode,
+             n_ops=len(dfg.ops))
     with live(tracer).span("map-dfg", mode=opts.mode,
                            n_ops=len(dfg.ops)) as sp:
         res = _map_dfg_portfolio(dfg, cgra, opts, cancel=cancel,
-                                 tracer=tracer)
+                                 tracer=tracer, record=record)
         sp.set(ok=res.ok, ii=res.ii, attempts=res.attempts)
-        return res
+    rec.emit("phase-end", phase="map-dfg", ok=res.ok, ii=res.ii,
+             attempts=res.attempts)
+    if record is not None:
+        # Failed results carry their postmortem; successes stay lean.
+        if not res.ok:
+            res = dataclasses.replace(res, flight=record.dump())
+    return res
 
 
 def _map_dfg_portfolio(dfg: DFG, cgra: CGRAConfig, opts: "MapOptions",
-                       *, cancel, tracer=None) -> MappingResult:
+                       *, cancel, tracer=None,
+                       record=None) -> MappingResult:
     trc = live(tracer)
+    rec = recording(record)
     t_start = _time.perf_counter()
     mode, seed = opts.mode, opts.seed
     sch, pf, ct = opts.schedule, opts.portfolio, opts.certify
@@ -190,12 +230,14 @@ def _map_dfg_portfolio(dfg: DFG, cgra: CGRAConfig, opts: "MapOptions",
     static_floor, static_detail = the_mii, ""
     if ct.static_prepass:
         from repro.analysis.demand import implied_demand_bounds
+        rec.emit("phase-begin", phase="static-prepass", mii=the_mii)
         with trc.span("static-prepass", mii=the_mii) as ssp:
             for b in implied_demand_bounds(
                     dfg, cgra, max_bus_fanout=sch.max_bus_fanout):
                 if b.min_ii > static_floor:
                     static_floor, static_detail = b.min_ii, b.summary()
             ssp.set(floor=static_floor)
+        rec.emit("phase-end", phase="static-prepass", floor=static_floor)
     attempts = 0
     certificates: list[IICertificate] = []
     last: tuple = (None, None, None, 0, (0, 0))
@@ -209,10 +251,12 @@ def _map_dfg_portfolio(dfg: DFG, cgra: CGRAConfig, opts: "MapOptions",
             certificates.append(IICertificate(
                 ii=cur_ii, jitter=-1, stage="static-demand",
                 detail=static_detail, nodes=0, wall_s=0.0))
+            rec.emit("static-skip", ii=cur_ii, floor=static_floor)
             continue
         for jitter in (0, 1, 2, 3):
             if cancel is not None and cancel.is_set():
                 break
+            rec.emit("attempt", ii=cur_ii, jitter=jitter)
             try:
                 with trc.span("schedule", ii=cur_ii, jitter=jitter):
                     sched = schedule_dfg(
@@ -242,6 +286,8 @@ def _map_dfg_portfolio(dfg: DFG, cgra: CGRAConfig, opts: "MapOptions",
                     # Proven unbindable: skip the whole portfolio budget
                     # for this (II, jitter) combination.
                     certificates.append(cert)
+                    rec.emit("certificate", ii=cur_ii, jitter=jitter,
+                             stage=cert.stage, nodes=cert.nodes)
                     if last[0] is None:
                         last = (sched, None, None, 0, (cg.n, cg.n_edges))
                     continue
@@ -257,6 +303,9 @@ def _map_dfg_portfolio(dfg: DFG, cgra: CGRAConfig, opts: "MapOptions",
                         report = validate_mapping(sched, cgra, placement)
                     last = (sched, placement, report, n_ops,
                             (cg.n, cg.n_edges))
+                    if not report.ok:
+                        rec.emit("validate-reject", ii=cur_ii,
+                                 source="csp")
                     if report.ok:
                         return MappingResult(
                             ok=True, mode=mode, ii=cur_ii, mii=the_mii,
@@ -324,6 +373,9 @@ def _map_dfg_portfolio(dfg: DFG, cgra: CGRAConfig, opts: "MapOptions",
                     trc.gauge("portfolio.best", best_cov)
                     trc.gauge("portfolio.coverage",
                               best_cov / n_ops if n_ops else 1.0)
+                rec.emit("harvest-round", ii=cur_ii, jitter=jitter,
+                         round=rnd, best=best_cov,
+                         coverage=best_cov / n_ops if n_ops else 1.0)
                 remaining -= sbts.it - start_it
                 order = np.argsort(-bests.sum(axis=1), kind="stable")
                 for k in order:
@@ -368,6 +420,9 @@ def _map_dfg_portfolio(dfg: DFG, cgra: CGRAConfig, opts: "MapOptions",
                         report = validate_mapping(sched, cgra, placement)
                     last = (sched, placement, report, size,
                             (cg.n, cg.n_edges))
+                    if not report.ok:
+                        rec.emit("validate-reject", ii=cur_ii,
+                                 source="portfolio")
                     if report.ok:
                         return MappingResult(
                             ok=True, mode=mode, ii=cur_ii, mii=the_mii,
@@ -399,6 +454,8 @@ def _map_dfg_portfolio(dfg: DFG, cgra: CGRAConfig, opts: "MapOptions",
                         sbts.reset_seed(int(k), constructive_init(
                             cg, sched, cgra, seed=base + fresh))
     sched, placement, report, size, cg_size = last
+    if cancel is not None and cancel.is_set():
+        rec.emit("cancelled", ii=sched.ii if sched else -1)
     # attempts == 0 with certificates attached means every (II, jitter)
     # combination that scheduled was *proven* unbindable before any
     # stochastic search ran — a full-range UNSAT proof, unless a cancel

@@ -225,6 +225,7 @@ class PortfolioSBTS:
         # never touches the RNG streams either way.
         from repro.obs.trace import live
         iters_counter = live(tracer).counter("portfolio.iters")
+        kick_counter = live(tracer).counter("portfolio.kicks")
         if self.g.n == 0 or self.k == 0:
             return self.best
         if target is not None and (self.best_size >= target).any():
@@ -241,6 +242,7 @@ class PortfolioSBTS:
             # (see GroupMoveConfig).  Counts against the iteration budget
             # so flag-on/off runs compare at equal budgets.
             if self._gm is not None and it % self._gm.cadence == 0:
+                kick_counter.inc()
                 self._group_kick(target)
                 if target is not None and \
                         (self.best_size >= target).any():

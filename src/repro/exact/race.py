@@ -39,6 +39,7 @@ from repro.core.cancel import CancelToken
 from repro.core.cgra import CGRAConfig
 from repro.core.dfg import DFG
 from repro.core.options import MapOptions
+from repro.obs.flight import recording
 from repro.obs.trace import live
 
 from .backend import exact_map_dfg
@@ -57,7 +58,8 @@ def _is_sound(res: MappingResult | None) -> bool:
 
 def race_map_dfg(dfg: DFG, cgra: CGRAConfig,
                  options: "MapOptions | dict | None" = None, *,
-                 cancel=None, tracer=None, **kwargs) -> MappingResult:
+                 cancel=None, tracer=None, record=None,
+                 **kwargs) -> MappingResult:
     """Race the exact backend against the portfolio (module docstring).
 
     Accepts the same `MapOptions` / dict / legacy-keyword forms as
@@ -75,7 +77,13 @@ def race_map_dfg(dfg: DFG, cgra: CGRAConfig,
     the engine's poll-at-iteration-top contract bounds it at 1) plus
     one "race-side" span per side.  Both sides share the tracer: the
     span records carry thread ids, so the export lays them out as
-    separate Perfetto tracks."""
+    separate Perfetto tracks.
+
+    ``record`` (`repro.obs.FlightRecorder`, default None) is shared
+    with the portfolio side and additionally receives the race's own
+    "race-cancel" / "race-winner" events; when no sound answer lands,
+    the returned failure carries the full dump (the same
+    ``result.flight`` contract as `map_dfg`)."""
     from repro.core.bandmap import map_dfg
 
     opts = MapOptions.coerce(options, kwargs)
@@ -88,6 +96,7 @@ def race_map_dfg(dfg: DFG, cgra: CGRAConfig,
         else opts.certify.budget)
     port_opts = opts.replace(backend="portfolio")
     trc = live(tracer)
+    rec = recording(record)
     tok_exact = CancelToken(parent=cancel)
     tok_port = CancelToken(parent=cancel)
 
@@ -101,7 +110,8 @@ def race_map_dfg(dfg: DFG, cgra: CGRAConfig,
     def run_portfolio() -> MappingResult:
         with trc.span("race-side", side="portfolio") as sp:
             res = map_dfg(dfg, cgra, options=port_opts,
-                          cancel=tok_port, tracer=tracer)
+                          cancel=tok_port, tracer=tracer,
+                          record=record)
             sp.set(ok=res.ok, wall_s=res.wall_s)
             return res
 
@@ -133,12 +143,15 @@ def race_map_dfg(dfg: DFG, cgra: CGRAConfig,
         # *before* requesting the cancel, so the loser's post-cancel
         # work is the counter delta at its exit.
         iters_at_cancel = trc.counter_value("portfolio.iters")
+        rec.emit("race-cancel",
+                 winner=winner[0] if winner is not None else "none")
         t_cancel = _time.perf_counter()
         tok_exact.cancel()
         tok_port.cancel()
         # Drain the loser (the original code let pool.shutdown absorb
         # it, which is exactly why its cancel wall was invisible):
         # record cancel-request→exit latency per still-pending side.
+        cancel_latency = None
         while pending:
             done, pending = wait(pending, return_when=FIRST_COMPLETED)
             t_exit = _time.perf_counter()
@@ -151,8 +164,9 @@ def race_map_dfg(dfg: DFG, cgra: CGRAConfig,
                 else:
                     held.setdefault(side, res)
                 if winner is not None and side != winner[0]:
+                    cancel_latency = t_exit - t_cancel
                     rsp.set(loser=side,
-                            cancel_latency_s=t_exit - t_cancel)
+                            cancel_latency_s=cancel_latency)
                     if side == "portfolio":
                         rsp.set(loser_iters_after_cancel=int(
                             trc.counter_value("portfolio.iters")
@@ -163,14 +177,31 @@ def race_map_dfg(dfg: DFG, cgra: CGRAConfig,
         if winner is not None:
             side, res = winner
             rsp.set(winner=side)
-            return dataclasses.replace(res, backend=f"race:{side}")
+            rec.emit("race-winner", winner=side,
+                     cancel_latency_s=cancel_latency)
+            res = dataclasses.replace(res, backend=f"race:{side}")
+            if record is not None:
+                # A sound negative (proved infeasible) is still a
+                # failure worth a postmortem: refresh its dump so the
+                # race-cancel/race-winner tail is included.
+                if not res.ok:
+                    res = dataclasses.replace(res,
+                                              flight=record.dump())
+            return res
         # No sound answer: prefer the portfolio's best-effort failure
         # (it carries the partial-coverage diagnostics), then the
         # prover's.
         rsp.set(winner="none")
+        rec.emit("race-winner", winner="none",
+                 cancel_latency_s=cancel_latency)
         for side in ("portfolio", "exact"):
             if side in held:
-                return dataclasses.replace(held[side],
-                                           backend=f"race:{side}")
+                res = dataclasses.replace(held[side],
+                                          backend=f"race:{side}")
+                if record is not None:
+                    if not res.ok:
+                        res = dataclasses.replace(res,
+                                                  flight=record.dump())
+                return res
         raise errors["portfolio"] if "portfolio" in errors \
             else errors["exact"]

@@ -1,6 +1,6 @@
-"""Observability layer: spans over every mapping phase, one metrics store.
+"""Observability layer: spans, metrics, flight events, exposition.
 
-Three modules:
+Six modules:
 
 - `trace` — `Tracer` (nestable spans on the monotonic clock, structured
   attributes, counters) and `NullTracer` / `live()` — the ``tracer=None``
@@ -8,9 +8,22 @@ Three modules:
   allocation-free.
 - `registry` — `MetricsRegistry`: counters, gauges and histograms
   (p50/p95/p99) behind one lock; the backing store for
-  `serve.MappingService.metrics()`.
+  `serve.MappingService.metrics()`.  Drained windows
+  (``snapshot(reset=True)``) fold into a cumulative store, so one
+  consumer's interval scrape never zeroes another's lifetime view.
 - `export` — plain-JSON dump and Chrome trace-event serialization; a
   traced `map_dfg` run opens directly in Perfetto / chrome://tracing.
+- `flight` — `FlightRecorder`: a bounded lock-guarded ring of
+  structured events, cheap enough to stay on in production; failed
+  results carry its `dump()` (``MappingResult.flight``).  The
+  ``record=None`` contract mirrors ``tracer=None``.
+- `explain` — `explain_result` / `ExplainReport`: narrate a
+  `MappingResult` (II escalation causes, routing-PE accounting,
+  coverage curve, race outcome); also ``MappingResult.explain()`` and
+  the ``python -m repro.obs.explain`` CLI.
+- `expo` — serve-tier exposition: Prometheus text rendering of
+  registry snapshots (with a shard/worker label dimension), the JSONL
+  `AccessLog`, and digest-keyed deterministic `head_sample`.
 
 Span taxonomy (STABLE PUBLIC VOCABULARY)
 ----------------------------------------
@@ -53,10 +66,48 @@ span name        emitted by / attributes
 ===============  =====================================================
 
 Counters (deterministic, gated by ``check_regression.py``):
-``portfolio.iters``, ``certify.csp_nodes``, ``certify.orbit_skips``,
-``exact.validations``, ``comap.arbitration_retries``.
+``portfolio.iters``, ``portfolio.kicks``, ``certify.csp_nodes``,
+``certify.orbit_skips``, ``exact.validations``,
+``comap.arbitration_retries``.
 Gauges: ``portfolio.coverage``, ``portfolio.best``, serve's
 ``queue_depth``.
+
+Flight-event taxonomy (STABLE PUBLIC VOCABULARY)
+------------------------------------------------
+
+The flight recorder's event kinds are pinned like ``PHASES`` — the
+explain reports and the serve postmortem tooling key on them, so
+renaming one is a breaking change to every stored ``flight`` dump:
+
+===============  =====================================================
+event kind       emitted by / attributes
+===============  =====================================================
+``phase-begin``  `map_dfg` major-phase entry — ``phase`` (``map-dfg``,
+                 ``static-prepass``), plus the phase's identity attrs
+``phase-end``    matching exit — ``phase``, outcome attrs (``ok``,
+                 ``ii``, ``floor``, ...)
+``attempt``      one (II, jitter) combination entered — ``ii``,
+                 ``jitter``
+``static-skip``  II below the static demand floor — ``ii``, ``floor``
+``certificate``  (II, jitter) proven unbindable — ``ii``, ``jitter``,
+                 ``stage``, ``nodes``
+``harvest-round``  one portfolio harvest round — ``ii``, ``jitter``,
+                 ``round``, ``coverage``, ``best``
+``validate-reject``  validator rejected a complete candidate — ``ii``,
+                 ``source`` (``csp`` | ``portfolio``)
+``cancelled``    cooperative cancel observed — ``ii``
+``race-cancel``  `exact.race` cancel request issued — ``winner``
+``race-winner``  race arbitration settled — ``winner``,
+                 ``cancel_latency_s``
+``comap-round``  one co-mapping round finished — ``ii``, ``round``,
+                 ``ok_regions``
+``comap-arbitrate``  arbitration verdict — ``ii``, ``round``, ``ok``
+``serve-admit``  request dispatched to a mapping worker — ``digest``,
+                 ``tenant``
+``serve-reject``  request resolved without mapping — ``digest``,
+                 ``reason`` (``static`` | ``negative-cache``)
+``serve-crash``  mapping worker raised — ``digest``, ``error``
+===============  =====================================================
 
 Tracer-threading rule (for future engine code)
 ----------------------------------------------
@@ -67,12 +118,20 @@ Code may check ``tracer is None`` / ``is not None`` but must NEVER
 branch on trace *content* (span timings, counter values) — tracing is
 observation only, and the ``tracer-default-none`` rule in
 `repro.analysis.astlint` enforces both halves on the engine modules.
+The flight recorder carries the identical contract on its ``record``
+parameter (``recording(record)``, ``record is None`` checks only),
+enforced by the twin ``recorder-default-none`` rule.
 """
 
 from .registry import NULL_COUNTER, Counter, MetricsRegistry, NullCounter
 from .trace import NULL_TRACER, NullTracer, SpanRecord, Tracer, live
 from .export import (from_json, to_chrome_trace, to_json,
                      write_chrome_trace, write_json)
+from .flight import (NULL_RECORDER, FlightEvent, FlightRecorder,
+                     NullFlightRecorder, recording)
+from .explain import ExplainReport, explain_result
+from .expo import (ACCESS_LOG_FIELDS, AccessLog, head_sample,
+                   parse_prometheus, render_prometheus)
 
 #: The stable span-name vocabulary documented above.
 PHASES = (
@@ -82,9 +141,24 @@ PHASES = (
     "race", "race-side", "comap-region", "arbitrate", "merge-replay",
 )
 
+#: The stable flight-event vocabulary documented above (the flight
+#: analogue of ``PHASES`` — every `FlightRecorder.emit` kind in the
+#: engine and serve tier is one of these).
+EVENTS = (
+    "phase-begin", "phase-end", "attempt", "static-skip", "certificate",
+    "harvest-round", "validate-reject", "cancelled",
+    "race-cancel", "race-winner", "comap-round", "comap-arbitrate",
+    "serve-admit", "serve-reject", "serve-crash",
+)
+
 __all__ = [
     "Counter", "MetricsRegistry", "NullCounter", "NULL_COUNTER",
     "Tracer", "NullTracer", "NULL_TRACER", "SpanRecord", "live",
     "to_json", "from_json", "to_chrome_trace", "write_chrome_trace",
     "write_json", "PHASES",
+    "FlightRecorder", "NullFlightRecorder", "NULL_RECORDER",
+    "FlightEvent", "recording", "EVENTS",
+    "ExplainReport", "explain_result",
+    "AccessLog", "ACCESS_LOG_FIELDS", "head_sample",
+    "render_prometheus", "parse_prometheus",
 ]

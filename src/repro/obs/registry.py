@@ -16,13 +16,21 @@ engine and the serving tier emit:
   serving tier's request-latency percentiles live here.
 
 ``snapshot(reset=False)`` returns a plain-dict view; ``reset=True``
-clears the store *after* the snapshot, so periodic scrapes can choose
-between cumulative totals (the default — a nightly scrape must not
-clobber the running totals other readers see) and interval deltas.
+returns the current *window* and then folds it into a cumulative
+drained store before clearing — so periodic scrapes get interval
+deltas while every other reader's default (cumulative) view keeps the
+lifetime totals.  One consumer draining the window can therefore never
+silently zero another's view: ``snapshot()`` after ``snapshot(
+reset=True)`` still reports everything ever recorded (drained
+histogram samples are retained up to ``_DRAIN_SAMPLE_CAP`` newest
+samples per name, so a long-lived service stays bounded; percentiles
+over a drained-and-capped history are over that retained suffix).
+``counter_value`` and ``percentiles`` read the same cumulative view.
 
-Thread-safety contract: the three backing dicts are declared in
-``_lock_guarded`` and only ever mutated under ``self._lock`` — the
-repo's ``lock-guarded-state`` AST-lint rule enforces exactly that.
+Thread-safety contract: the backing dicts (including the drained
+store) are declared in ``_lock_guarded`` and only ever mutated under
+``self._lock`` — the repo's ``lock-guarded-state`` AST-lint rule
+enforces exactly that.
 """
 
 from __future__ import annotations
@@ -65,6 +73,10 @@ class NullCounter:
 
 NULL_COUNTER = NullCounter()
 
+#: Newest histogram samples retained per name in the drained store — a
+#: week of reset-scrapes must not accumulate unbounded latency samples.
+_DRAIN_SAMPLE_CAP = 65536
+
 
 class MetricsRegistry:
     """See module docstring."""
@@ -72,7 +84,7 @@ class MetricsRegistry:
     # Shared mutable state: serve workers, the race's two sides and any
     # metrics() reader hit this concurrently.  Enforced by the
     # `lock-guarded-state` astlint rule.
-    _lock_guarded = ("_counters", "_gauges", "_hists")
+    _lock_guarded = ("_counters", "_gauges", "_hists", "_drained")
 
     def __init__(self) -> None:
         self._lock = threading.Lock()
@@ -80,6 +92,9 @@ class MetricsRegistry:
         # name -> [last, min, max, count, total]
         self._gauges: dict[str, list] = {}
         self._hists: dict[str, list[float]] = {}
+        # Prior windows folded in by snapshot(reset=True): same shapes
+        # as the live stores (histogram samples capped, newest kept).
+        self._drained: dict = dict(counters={}, gauges={}, hists={})
 
     # ------------------------------------------------------------ write
     def inc(self, name: str, n: int | float = 1) -> None:
@@ -137,13 +152,18 @@ class MetricsRegistry:
 
     # ------------------------------------------------------------- read
     def counter_value(self, name: str) -> int | float:
+        """Lifetime value — drained windows included, so a concurrent
+        ``snapshot(reset=True)`` never makes a counter appear to move
+        backwards."""
         with self._lock:
-            return self._counters.get(name, 0)
+            return self._drained["counters"].get(name, 0) + \
+                self._counters.get(name, 0)
 
     def percentiles(self, name: str,
                     qs: tuple = (50, 95, 99)) -> tuple[float, ...]:
         with self._lock:
-            samples = list(self._hists.get(name, ()))
+            samples = list(self._drained["hists"].get(name, ())) + \
+                list(self._hists.get(name, ()))
         if not samples:
             return tuple(0.0 for _ in qs)
         arr = np.asarray(samples, dtype=float)
@@ -152,17 +172,57 @@ class MetricsRegistry:
     def snapshot(self, reset: bool = False) -> dict:
         """Plain-dict view: ``{"counters": {...}, "gauges": {...},
         "histograms": {...}}``.  Gauges report last/min/max/count/mean;
-        histograms report count/mean/max plus p50/p95/p99.  With
-        ``reset=True`` the store is cleared after the snapshot (one
-        atomic read-and-reset — no updates can fall between)."""
+        histograms report count/mean/max plus p50/p95/p99.
+
+        The default view is *cumulative* (drained windows merged back
+        in).  ``reset=True`` returns only the current window and folds
+        it into the drained store before clearing (one atomic
+        read-and-fold-and-reset — no updates can fall between), so an
+        interval scraper and a lifetime reader can share the registry
+        without the scrape zeroing the reader (the double-drain
+        hazard)."""
         with self._lock:
             counters = dict(self._counters)
             gauges = {k: list(v) for k, v in self._gauges.items()}
             hists = {k: list(v) for k, v in self._hists.items()}
+            d = self._drained
             if reset:
+                for k, v in counters.items():
+                    d["counters"][k] = d["counters"].get(k, 0) + v
+                for k, g in gauges.items():
+                    dg = d["gauges"].get(k)
+                    if dg is None:
+                        d["gauges"][k] = list(g)
+                    else:
+                        dg[0] = g[0]
+                        dg[1] = min(dg[1], g[1])
+                        dg[2] = max(dg[2], g[2])
+                        dg[3] += g[3]
+                        dg[4] += g[4]
+                for k, samples in hists.items():
+                    pool = d["hists"].setdefault(k, [])
+                    pool.extend(samples)
+                    if len(pool) > _DRAIN_SAMPLE_CAP:
+                        del pool[:len(pool) - _DRAIN_SAMPLE_CAP]
                 self._counters.clear()
                 self._gauges.clear()
                 self._hists.clear()
+            else:
+                for k, v in d["counters"].items():
+                    counters[k] = counters.get(k, 0) + v
+                for k, dg in d["gauges"].items():
+                    g = gauges.get(k)
+                    if g is None:
+                        gauges[k] = list(dg)
+                    else:
+                        # The live window's last is the newest sample;
+                        # envelope and count/total fold across windows.
+                        g[1] = min(g[1], dg[1])
+                        g[2] = max(g[2], dg[2])
+                        g[3] += dg[3]
+                        g[4] += dg[4]
+                for k, samples in d["hists"].items():
+                    hists[k] = list(samples) + hists.get(k, [])
         out_g = {}
         for name, (last, lo, hi, count, total) in gauges.items():
             out_g[name] = dict(last=last, min=lo, max=hi, count=count,

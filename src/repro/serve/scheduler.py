@@ -48,6 +48,15 @@ A batch of `MapRequest`s is served in four stages:
 The scheduler is synchronous per batch — `run` returns when every
 request has an outcome — which is what the benchmark loop and the
 `MappingService` facade want; a long-lived server loops over batches.
+
+Observability: a scheduler-level flight recorder (``record=``)
+receives the serve-admit / serve-reject / serve-crash event stream;
+every dispatched worker additionally runs under its *own* per-request
+`FlightRecorder`, so a failed or crashed map returns with
+``result.flight`` attached without interleaving batch-mates.  A
+digest-keyed head sampler (``sample=``, a ``digest -> tracer-or-None``
+callable) attaches live tracers to a deterministic subset of requests;
+both default to ``None``/off, keeping dispatch outcomes bit-identical.
 """
 
 from __future__ import annotations
@@ -64,6 +73,7 @@ from repro.core.cgra import CGRAConfig
 from repro.core.dfg import DFG
 from repro.core.options import MapOptions
 from repro.core.validate import validate_mapping
+from repro.obs.flight import FlightRecorder, recording
 
 from .cache import MappingCache
 from .canon import (CanonicalForm, canonical_dfg, canonical_form,
@@ -93,7 +103,7 @@ class ServeOutcome:
     result: MappingResult
     hit: bool
     source: str          # memory | disk | negative-* | dedupe | computed
-    #                    # | comap | static_reject
+    #                    # | comap | static_reject | crash
     # Serve-side latency: batch admission -> this request resolved,
     # queue wait included (NOT just the mapper's internal wall time).
     wall_s: float
@@ -109,8 +119,21 @@ class RequestScheduler:
 
     def __init__(self, cache: MappingCache, *,
                  max_workers: int | None = None,
-                 base_seed: int = 0) -> None:
+                 base_seed: int = 0,
+                 record=None, sample=None,
+                 flight_capacity: int = 256) -> None:
         self.cache = cache
+        # Scheduler-level flight recorder (``None`` = off): receives the
+        # serve-admit / serve-reject / serve-crash stream for every
+        # batch this scheduler runs.  Distinct from the *per-request*
+        # recorders `run` creates for dispatched workers — a request's
+        # failure dump must not interleave with its batch-mates'.
+        self.record = record
+        # Head sampler: callable ``digest -> tracer-or-None`` (the
+        # service wires `obs.expo.head_sample` through this).  ``None``
+        # keeps dispatch bit-identical to the unsampled scheduler.
+        self.sample = sample
+        self.flight_capacity = flight_capacity
         # The numpy portfolio is GIL-heavy python+numpy: oversubscribing
         # cores slows every in-flight map and inflates tail latency, so
         # the default pool matches the machine.  Requests running the
@@ -136,6 +159,7 @@ class RequestScheduler:
         # (queue wait included — a fast map behind a long queue is a
         # slow request).
         t_batch = _time.perf_counter()
+        rec = recording(self.record)
 
         def resolve(i: int, result, *, hit: bool, source: str) -> None:
             outcomes[i] = ServeOutcome(
@@ -147,7 +171,14 @@ class RequestScheduler:
             src = "dedupe" if dedupe else cache_hit.source
             if cache_hit.negative:
                 src = f"negative-{src}"
+                rec.emit("serve-reject", digest=canons[i].digest,
+                         reason="negative-cache")
             resolve(i, cache_hit.result, hit=True, source=src)
+
+        def resolve_static(i: int, neg) -> None:
+            rec.emit("serve-reject", digest=canons[i].digest,
+                     reason="static")
+            resolve(i, neg, hit=False, source="static_reject")
 
         # Stage 2: cache lookups in admission order.  Tenant-tagged
         # requests skip the cache *and* dedupe here: co-residency asks
@@ -175,7 +206,7 @@ class RequestScheduler:
                 continue
             neg = self._static_reject(requests[i], canons[i], effs[i])
             if neg is not None:
-                resolve(i, neg, hit=False, source="static_reject")
+                resolve_static(i, neg)
             else:
                 pending.append(i)
 
@@ -223,7 +254,7 @@ class RequestScheduler:
                 continue
             neg = self._static_reject(requests[i], canons[i], effs[i])
             if neg is not None:
-                resolve(i, neg, hit=False, source="static_reject")
+                resolve_static(i, neg)
             else:
                 solo.append(i)
         solo.sort(key=lambda i: (requests[i].deadline, i))
@@ -239,13 +270,27 @@ class RequestScheduler:
         # identical canonical input and options, so a rerun would
         # reproduce it bit-for-bit.
         with ThreadPoolExecutor(max_workers=self.max_workers) as pool:
+            crash_ctx: dict[object, tuple[int, FlightRecorder]] = {}
+
             def submit_solo(i: int):
                 # Map the *canonical* copy: bit-identical input and a
                 # digest-derived seed make the whole run a function of
                 # structure + options — see `canon.canonical_dfg`.
-                return pool.submit(
+                # Every dispatched worker runs under its own flight
+                # recorder (a request's failure dump must not
+                # interleave with its batch-mates'); the per-digest
+                # head sampler decides whether it also gets a tracer.
+                rec.emit("serve-admit", digest=canons[i].digest,
+                         tenant=requests[i].tenant)
+                req_rec = FlightRecorder(self.flight_capacity)
+                tracer = self.sample(canons[i].digest) \
+                    if self.sample is not None else None
+                fut = pool.submit(
                     map_dfg, canonical_dfg(requests[i].dfg, canons[i]),
-                    requests[i].cgra, effs[i])
+                    requests[i].cgra, effs[i],
+                    tracer=tracer, record=req_rec)
+                crash_ctx[fut] = (i, req_rec)
+                return fut
 
             futs = {submit_solo(i): ("solo", i) for i in solo}
             futs.update(
@@ -292,9 +337,36 @@ class RequestScheduler:
             for fut in as_completed(list(futs)):
                 tag, payload = futs[fut]
                 if tag == "solo":
-                    resolve_computed(payload, fut.result())
+                    try:
+                        res = fut.result()
+                    except Exception as exc:
+                        i, req_rec = crash_ctx[fut]
+                        res = self._crash_result(requests[i], effs[i],
+                                                 req_rec, exc)
+                        rec.emit("serve-crash", digest=canons[i].digest,
+                                 error=type(exc).__name__)
+                        resolve(i, res, hit=False, source="crash")
+                        # Followers share the crashed leader's result:
+                        # an identical canonical input and options
+                        # would reproduce the crash, not dodge it.
+                        for j in followers.pop(i, ()):
+                            resolve(j, res, hit=False, source="crash")
+                        continue
+                    resolve_computed(payload, res)
                     continue
-                for i, res in fut.result():
+                try:
+                    pairs = fut.result()
+                except Exception as exc:
+                    # A crashed co-map run takes no kernel down with
+                    # it: every group member falls back to a solo map
+                    # (the same degradation path as an unplaced
+                    # kernel).
+                    rec.emit("serve-crash", digest="co-tenant",
+                             error=type(exc).__name__)
+                    for i in payload:
+                        fallback_futs[submit_solo(i)] = i
+                    continue
+                for i, res in pairs:
                     if res is not None:
                         # Successful region results are NOT cached:
                         # they bind a region view whose shape depends
@@ -307,10 +379,39 @@ class RequestScheduler:
                         # through the pool like any other computation.
                         fallback_futs[submit_solo(i)] = i
             for fut in as_completed(list(fallback_futs)):
-                resolve_computed(fallback_futs[fut], fut.result())
+                i = fallback_futs[fut]
+                try:
+                    res = fut.result()
+                except Exception as exc:
+                    _, req_rec = crash_ctx[fut]
+                    rec.emit("serve-crash", digest=canons[i].digest,
+                             error=type(exc).__name__)
+                    resolve(i, self._crash_result(requests[i], effs[i],
+                                                  req_rec, exc),
+                            hit=False, source="crash")
+                    continue
+                resolve_computed(i, res)
         return outcomes
 
     # --------------------------------------------------------- helpers
+    def _crash_result(self, req: MapRequest, eff: MapOptions,
+                      req_rec: FlightRecorder,
+                      exc: BaseException) -> MappingResult:
+        """Synthetic ``ok=False`` outcome for a worker that raised.
+
+        Carries the request's flight dump (postmortem, capped with a
+        terminal "serve-crash" event) and ``attempts=1`` with no
+        certificates — deliberately failing the cache's sound-negative
+        admission rule, so a crash is never stored as a proof and an
+        isomorphic retry gets a fresh run."""
+        req_rec.emit("serve-crash", error=type(exc).__name__,
+                     detail=str(exc)[:200])
+        return MappingResult(
+            ok=False, mode=eff.mode, ii=-1, mii=0, n_routing_pes=0,
+            ports_per_vio={}, placement={}, sched=None, report=None,
+            cg_size=(0, 0), mis_size=0, n_ops=len(req.dfg.ops),
+            attempts=1, wall_s=0.0, flight=req_rec.dump())
+
     def _static_reject(self, req: MapRequest, canon: "CanonicalForm",
                        eff: MapOptions) -> MappingResult | None:
         """Static admission check on a cache miss (calling thread —

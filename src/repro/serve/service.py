@@ -18,15 +18,26 @@ isomorphic to the DFG the infeasibility was established for.
 The service keeps running metrics — per-request latency percentiles,
 hit sources, throughput — which `launch/serve.py`,
 `examples/serve_batch.py` and the ``serve`` benchmark section report.
+Three always-on exposition surfaces ride on top (`repro.obs`):
+`prometheus()` renders the registry in Prometheus text format with a
+shard label, every request appends one line to a JSONL access log
+(`obs.expo.AccessLog`), and ``trace_sample`` head-samples requests by
+canonical digest for full tracing at bounded cost — sampling is a pure
+function of (digest, rate), so the sampled set is stable across
+shards and replays.
 """
 
 from __future__ import annotations
 
 import time as _time
+from collections import deque
 
 from repro.core.cgra import CGRAConfig
 from repro.core.dfg import DFG
+from repro.obs.expo import AccessLog, head_sample, render_prometheus
+from repro.obs.flight import FlightRecorder
 from repro.obs.registry import MetricsRegistry
+from repro.obs.trace import Tracer
 
 from .cache import MappingCache
 from .scheduler import MapRequest, RequestScheduler, ServeOutcome
@@ -51,14 +62,49 @@ class MappingService:
                  capacity: int = 256, art_dir: str | None = None,
                  max_workers: int | None = None,
                  base_seed: int = 0,
-                 registry: MetricsRegistry | None = None) -> None:
+                 registry: MetricsRegistry | None = None,
+                 shard: str | None = None,
+                 trace_sample: float = 0.0,
+                 access_log: AccessLog | None = None,
+                 flight: FlightRecorder | None = None) -> None:
         self.cache = cache if cache is not None else \
             MappingCache(capacity=capacity, art_dir=art_dir)
+        # ``shard`` names this service instance in Prometheus labels
+        # (a multi-process deployment scrapes one endpoint per shard
+        # and aggregates by label).  ``trace_sample`` is the head-
+        # sampling rate in [0, 1]: requests whose canonical digest is
+        # picked by `obs.expo.head_sample` run under a live tracer,
+        # collected in ``self.traces``; 0.0 (the default) keeps serve
+        # runs bit-identical to the untraced service.
+        self.shard = shard
+        self.trace_sample = float(trace_sample)
+        self.access_log = access_log if access_log is not None \
+            else AccessLog()
+        # Service-level flight recorder: the scheduler's admit/reject/
+        # crash stream.  Always on (near-zero cost) — ``flight=None``
+        # gets a default ring, not a null recorder.
+        self.flight = flight if flight is not None \
+            else FlightRecorder()
+        self.traces: deque = deque(maxlen=64)
         self.scheduler = RequestScheduler(self.cache,
                                           max_workers=max_workers,
-                                          base_seed=base_seed)
+                                          base_seed=base_seed,
+                                          record=self.flight,
+                                          sample=self._sample_tracer)
         self.registry = registry if registry is not None \
             else MetricsRegistry()
+
+    def _sample_tracer(self, digest: str):
+        """Digest-keyed head sampler handed to the scheduler: returns
+        a fresh `Tracer` for sampled digests (retained in
+        ``self.traces`` as ``(digest, tracer)``, newest-64 ring) and
+        ``None`` otherwise.  Pure in (digest, rate) — see
+        `obs.expo.head_sample`."""
+        if not head_sample(digest, self.trace_sample):
+            return None
+        tracer = Tracer()
+        self.traces.append((digest, tracer))
+        return tracer
 
     # -------------------------------------------------------------- api
     def map(self, dfg: DFG, cgra: CGRAConfig, *, deadline: float = 0.0,
@@ -91,6 +137,15 @@ class MappingService:
             counters=counters,
             gauges={"queue_depth": len(requests)},
             observations={"latency_s": [o.wall_s for o in outcomes]})
+        # One access-log line per request (schema pinned in
+        # `obs.expo.ACCESS_LOG_FIELDS`); ``wall_s`` is the serve-side
+        # queue-inclusive latency, not the mapper's internal wall.
+        for req, out in zip(requests, outcomes):
+            self.access_log.log(
+                req_id=out.req_id, digest=out.canon_digest,
+                tenant=req.tenant, ok=out.result.ok, hit=out.hit,
+                source=out.source, wall_s=round(out.wall_s, 6),
+                ii=out.result.ii, backend=out.result.backend)
         return outcomes
 
     # ---------------------------------------------------------- metrics
@@ -126,6 +181,25 @@ class MappingService:
             queue_depth=qd,
             cache=self.cache.stats.as_dict(),
         )
+
+    def prometheus(self, *, labels: dict | None = None,
+                   namespace: str = "bandmap") -> str:
+        """Prometheus text-format exposition of the registry's
+        *cumulative* view (never drains: a scrape must not race a
+        `metrics(reset=True)` consumer) plus a derived ``hit_rate``
+        gauge.  ``labels`` defaults to ``{"shard": self.shard}`` when
+        this service was given a shard name."""
+        snap = self.registry.snapshot()
+        c = snap["counters"]
+        n_req = c.get("requests", 0)
+        gauges = dict(snap["gauges"])
+        gauges["hit_rate"] = dict(
+            last=round(c.get("hits", 0) / n_req, 6) if n_req else 0.0)
+        snap = dict(snap, gauges=gauges)
+        if labels is None and self.shard is not None:
+            labels = {"shard": self.shard}
+        return render_prometheus(snap, labels=labels,
+                                 namespace=namespace)
 
     def summary(self) -> str:
         m = self.metrics()

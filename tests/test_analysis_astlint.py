@@ -82,6 +82,15 @@ def f(tracer=None):
     if tracer:
         tracer.count("x")
 """, "src/repro/comap/comap.py"),
+    ("recorder-non-none-default", "recorder-default-none", """
+def map_it(dfg, record=NULL_RECORDER):
+    return run(dfg, record)
+""", "src/repro/core/bandmap.py"),
+    ("recorder-boolop-branch", "recorder-default-none", """
+def f(record=None):
+    if record is not None and not res.ok:
+        return record.dump()
+""", "src/repro/exact/race.py"),
     ("knob-subscript", "options-single-source", """
 def dispatch(req):
     return run(iters=req.options["mis_iters"])
@@ -149,6 +158,20 @@ def plot(tracer):
     if tracer:
         draw(tracer.finished)
 """, "src/repro/analysis/plots.py"),
+    ("recorder-identity-check-ok", """
+def f(dfg, *, record=None):
+    rec = recording(record)
+    rec.emit("attempt", ii=2)
+    if record is not None:
+        if not res.ok:
+            return record.dump()
+    return res
+""", "src/repro/core/bandmap.py"),
+    ("recorder-rule-scoped-to-engine", """
+def replay(record):
+    if record:
+        draw(record.dump())
+""", "src/repro/analysis/plots.py"),
     ("knob-membership-test-ok", """
 def solo(req):
     eff = MapOptions.coerce(req.options)
@@ -190,7 +213,7 @@ def test_compliant_twin_is_clean(name, src, rel):
 
 def test_all_rules_covered():
     """The seeded-violation fixtures exercise every named rule."""
-    assert len(RULE_NAMES) >= 6
+    assert len(RULE_NAMES) >= 8
     assert {v[1] for v in VIOLATIONS} == set(RULE_NAMES)
 
 

@@ -2,8 +2,10 @@
 fail loudly when a whole baseline section vanishes from the fresh JSON
 (a benchmark that silently stopped running), while retired individual
 rows stay informational.  Rows carrying ``counters`` (the traced
-kernel_table) are additionally gated on each deterministic counter —
-tighter factor, no machine-speed scaling, missing counter = failure."""
+kernel_table and device_engine rows) are additionally gated on each
+deterministic counter — tighter factor, no machine-speed scaling,
+missing counter = failure — and rows carrying ``phases`` on phase
+*presence* (a vanished phase is lost instrumentation)."""
 
 import os
 import sys
@@ -14,9 +16,12 @@ from benchmarks.check_regression import SECTIONS, check  # noqa: E402
 
 
 def _bench(wall=1.0, sections=("kernel_table",), kernels=("C2K6",),
-           counters=None):
+           counters=None, phases=None):
     return {s: [dict(kernel=k, mode="bandmap", wall_s=wall,
                      **({"counters": dict(counters)} if counters
+                        else {}),
+                     **({"phases": {p: dict(count=1, total_s=0.1)
+                                    for p in phases}} if phases
                         else {}))
                 for k in kernels] for s in sections}
 
@@ -120,3 +125,45 @@ def test_counterless_rows_skip_the_gate():
     fresh = _bench()   # fresh row dropped its counters dict entirely
     failures = check(base, fresh)
     assert failures and "instrumentation" in failures[0]
+
+
+def test_device_engine_counters_are_gated():
+    base = _bench(sections=("device_engine",),
+                  counters={"portfolio_iters": 1000})
+    fresh = _bench(sections=("device_engine",),
+                   counters={"portfolio_iters": 2000})
+    failures = check(base, fresh)
+    assert failures and "device_engine" in failures[0]
+    # Missing the counter entirely fails the instrumentation-loss way.
+    bare = _bench(sections=("device_engine",))
+    failures = check(base, bare)
+    assert failures and "instrumentation" in failures[0]
+
+
+# -------------------------------------------------- phase-presence gate
+
+def test_matching_phases_pass():
+    base = _bench(phases=("certify", "portfolio"))
+    fresh = _bench(phases=("portfolio", "certify"))
+    assert check(base, fresh) == []
+
+
+def test_vanished_phase_fails():
+    base = _bench(phases=("certify", "portfolio", "validate"))
+    fresh = _bench(phases=("certify", "portfolio"))
+    failures = check(base, fresh)
+    assert len(failures) == 1
+    assert "'validate'" in failures[0]
+    assert "instrumentation" in failures[0]
+
+
+def test_new_phase_in_fresh_is_fine():
+    base = _bench(phases=("certify",))
+    fresh = _bench(phases=("certify", "static-prepass"))
+    assert check(base, fresh) == []
+
+
+def test_phases_of_retired_row_are_not_gated():
+    base = _bench(kernels=("C2K6", "C5K5"), phases=("certify",))
+    fresh = _bench(kernels=("C2K6",), phases=("certify",))
+    assert check(base, fresh) == []      # retired row, not lost phases

@@ -1,0 +1,134 @@
+"""Serve exposition: Prometheus text-format round-trip, the pinned
+access-log JSONL schema (+ digest redaction), and deterministic
+head-sampling."""
+
+import json
+import threading
+
+import pytest
+
+from repro.obs import (ACCESS_LOG_FIELDS, AccessLog, MetricsRegistry,
+                       head_sample, parse_prometheus, render_prometheus)
+
+
+# ------------------------------------------------------------ prometheus
+
+def _snapshot():
+    reg = MetricsRegistry()
+    reg.record(
+        counters={"requests": 200, "hits": 150, "source.computed": 50},
+        gauges={"queue_depth": 7},
+        observations={"latency_s": [i / 1000 for i in range(1, 101)]})
+    return reg.snapshot()
+
+
+def test_render_prometheus_types_and_labels():
+    text = render_prometheus(_snapshot(), labels={"shard": "3"})
+    assert "# TYPE bandmap_requests counter" in text
+    assert 'bandmap_requests{shard="3"} 200' in text
+    assert "# TYPE bandmap_queue_depth gauge" in text
+    assert 'bandmap_queue_depth{shard="3"} 7' in text
+    assert "# TYPE bandmap_latency_s summary" in text
+    assert 'bandmap_latency_s{quantile="0.99",shard="3"}' in text
+    # Dotted counter names sanitize to identifier-safe metric names.
+    assert 'bandmap_source_computed{shard="3"} 50' in text
+    assert text.endswith("\n")
+
+
+def test_prometheus_round_trip():
+    snap = _snapshot()
+    parsed = parse_prometheus(
+        render_prometheus(snap, labels={"shard": "0"}))
+    labels = {"shard": "0"}
+    assert parsed["bandmap_requests"] == [(labels, 200.0)]
+    assert parsed["bandmap_hits"] == [(labels, 150.0)]
+    assert parsed["bandmap_queue_depth"] == [(labels, 7.0)]
+    # Summary quantiles match the snapshot's percentiles.
+    h = snap["histograms"]["latency_s"]
+    by_q = {lab["quantile"]: v
+            for lab, v in parsed["bandmap_latency_s"]}
+    assert by_q["0.5"] == pytest.approx(h["p50"])
+    assert by_q["0.99"] == pytest.approx(h["p99"])
+    assert parsed["bandmap_latency_s_count"] == [(labels, 100.0)]
+    assert parsed["bandmap_latency_s_sum"][0][1] == \
+        pytest.approx(h["mean"] * h["count"])
+
+
+def test_render_without_labels_or_namespace():
+    text = render_prometheus(_snapshot(), namespace="")
+    assert "\nrequests 200" in text or text.startswith("requests 200") \
+        or "requests 200" in text
+    parsed = parse_prometheus(text)
+    assert parsed["requests"] == [({}, 200.0)]
+
+
+# ----------------------------------------------------------- access log
+
+def test_access_log_schema_is_pinned():
+    log = AccessLog()
+    line = log.log(req_id="r1", digest="a" * 64, ok=True, hit=False,
+                   source="computed", wall_s=0.01, ii=3,
+                   backend="portfolio", rogue_key="dropped")
+    entry = json.loads(line)
+    assert tuple(entry) == ACCESS_LOG_FIELDS      # order + exact keys
+    assert entry["tenant"] is None                # missing -> None
+    assert "rogue_key" not in entry
+    assert entry["ts"] > 0
+    assert log.tail() == [entry]
+
+
+def test_access_log_redaction_and_ring(tmp_path):
+    path = str(tmp_path / "logs" / "access.jsonl")
+    log = AccessLog(path, capacity=3, redact_digests=True)
+    for i in range(5):
+        log.log(req_id=f"r{i}", digest="abcdef0123456789" * 4)
+    assert log.total == 5 and len(log) == 3
+    assert [e["req_id"] for e in log.tail()] == ["r2", "r3", "r4"]
+    assert all(len(e["digest"]) == 12 for e in log.tail())
+    # The file mirror keeps every line (the ring only bounds memory).
+    with open(path) as fh:
+        lines = [json.loads(ln) for ln in fh if ln.strip()]
+    assert len(lines) == 5
+    assert all(tuple(e) == ACCESS_LOG_FIELDS for e in lines)
+    assert all(len(e["digest"]) == 12 for e in lines)
+
+
+def test_access_log_thread_safe():
+    log = AccessLog(capacity=100_000)
+    n_threads, per_thread = 8, 500
+
+    def work(tag):
+        for i in range(per_thread):
+            log.log(req_id=f"{tag}-{i}")
+
+    threads = [threading.Thread(target=work, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert log.total == n_threads * per_thread
+    assert len({e["req_id"] for e in log.tail()}) == log.total
+
+
+# ------------------------------------------------------------- sampling
+
+def test_head_sample_deterministic_and_bounded():
+    digests = [f"{i:08x}{'0' * 56}" for i in range(10_000)]
+    picked = [d for d in digests if head_sample(d, 0.1)]
+    again = [d for d in digests if head_sample(d, 0.1)]
+    assert picked == again                       # pure in (digest, rate)
+    assert 0 < len(picked) < len(digests)
+    frac = len(picked) / len(digests)
+    assert 0.05 < frac < 0.2                     # ~rate, hash-spread
+    # A sampled set at a lower rate nests inside the higher rate's.
+    low = {d for d in digests if head_sample(d, 0.05)}
+    assert low <= set(picked)
+
+
+def test_head_sample_edges():
+    assert head_sample("deadbeef", 0.0) is False
+    assert head_sample("deadbeef", -1.0) is False
+    assert head_sample("deadbeef", 1.0) is True
+    assert head_sample("", 1.0) is True
+    assert head_sample("", 0.5) is True          # empty digest -> bucket 0

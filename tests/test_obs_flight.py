@@ -1,0 +1,145 @@
+"""Flight recorder: ring mechanics, thread safety, engine wiring, and
+the ``record=None`` bit-identity contract (the NullTracer twin).
+
+The load-bearing sweep mirrors ``test_obs_trace``'s tracer bit-identity
+test: `map_dfg` under a live `FlightRecorder` must return exactly the
+same (ok, II, routing-PE, attempts, MIS size) as with ``record=None``
+on every paper kernel — recording is observation only.
+"""
+
+import threading
+
+import pytest
+
+from repro.core import PAPER_KERNELS, cnkm_name, make_cnkm, map_dfg
+from repro.core.cgra import CGRAConfig
+from repro.obs import (EVENTS, NULL_RECORDER, FlightEvent, FlightRecorder,
+                       NullFlightRecorder, recording)
+
+
+# ----------------------------------------------------------------- ring
+
+def test_ring_keeps_newest_capacity_events():
+    rec = FlightRecorder(capacity=4)
+    for i in range(10):
+        rec.emit("attempt", ii=i)
+    dump = rec.dump()
+    assert len(dump) == 4
+    assert [e["ii"] for e in dump] == [6, 7, 8, 9]      # oldest-first
+    assert [e["seq"] for e in dump] == [6, 7, 8, 9]     # global seq kept
+    assert rec.total == 10 and len(rec) == 4
+
+
+def test_event_as_dict_shape_and_monotone_clock():
+    rec = FlightRecorder()
+    rec.emit("phase-begin", phase="map-dfg")
+    rec.emit("certificate", ii=2, stage="exhausted")
+    a, b = rec.dump()
+    assert a["kind"] == "phase-begin" and a["phase"] == "map-dfg"
+    assert b["kind"] == "certificate" and b["stage"] == "exhausted"
+    assert set(a) == {"seq", "t", "kind", "phase"}
+    assert 0 <= a["t"] <= b["t"]
+    ev = FlightEvent(seq=3, t=1.25, kind="attempt", attrs={"ii": 2})
+    assert ev.as_dict() == dict(seq=3, t=1.25, kind="attempt", ii=2)
+
+
+def test_null_recorder_contract():
+    assert recording(None) is NULL_RECORDER
+    rec = FlightRecorder()
+    assert recording(rec) is rec
+    NULL_RECORDER.emit("attempt", ii=2)
+    assert NULL_RECORDER.dump() == ()
+    assert NULL_RECORDER.total == 0 and len(NULL_RECORDER) == 0
+    assert NullFlightRecorder().dump() == ()
+
+
+def test_concurrent_emits_lossless_and_unique_seq():
+    rec = FlightRecorder(capacity=100_000)
+    n_threads, per_thread = 8, 2000
+
+    def work(tag):
+        for _ in range(per_thread):
+            rec.emit("attempt", tag=tag)
+
+    threads = [threading.Thread(target=work, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    dump = rec.dump()
+    assert rec.total == n_threads * per_thread == len(dump)
+    seqs = [e["seq"] for e in dump]
+    assert len(set(seqs)) == len(seqs)
+    assert seqs == sorted(seqs)
+
+
+# -------------------------------------------------------- engine wiring
+
+def test_failed_run_carries_flight_dump():
+    rec = FlightRecorder()
+    res = map_dfg(make_cnkm(2, 8), CGRAConfig(rows=4, cols=4),
+                  mode="busmap", max_ii=2, record=rec)
+    assert not res.ok
+    assert len(res.flight) > 0
+    kinds = {e["kind"] for e in res.flight}
+    assert kinds <= set(EVENTS), kinds - set(EVENTS)
+    assert "certificate" in kinds or "attempt" in kinds
+    # Events carry the escalation structure an explain report needs.
+    assert any(e["kind"] == "phase-begin" and e["phase"] == "map-dfg"
+               for e in res.flight)
+
+
+def test_successful_run_stays_lean():
+    rec = FlightRecorder()
+    res = map_dfg(make_cnkm(5, 5), CGRAConfig(), record=rec)
+    assert res.ok
+    assert res.flight == ()        # successes don't carry a postmortem
+    assert rec.total > 0           # but the ring did record the run
+
+
+def test_unrecorded_run_has_no_flight():
+    res = map_dfg(make_cnkm(2, 8), CGRAConfig(rows=4, cols=4),
+                  mode="busmap", max_ii=2)
+    assert not res.ok and res.flight == ()
+
+
+def test_race_failure_carries_race_events():
+    from repro.exact.race import race_map_dfg
+    rec = FlightRecorder()
+    res = race_map_dfg(make_cnkm(2, 8), CGRAConfig(rows=4, cols=4),
+                       mode="busmap", max_ii=2, record=rec)
+    assert not res.ok and res.proved_infeasible
+    kinds = [e["kind"] for e in res.flight]
+    assert "race-cancel" in kinds and "race-winner" in kinds
+    winner = [e for e in res.flight if e["kind"] == "race-winner"][-1]
+    assert winner["winner"] in ("exact", "portfolio")
+
+
+# --------------------------------------------------------- bit identity
+
+SLOW = {(2, 8, "busmap"), (5, 5, "busmap")}
+BIT_CASES = [
+    pytest.param(n, m, mode, marks=pytest.mark.slow)
+    if (n, m, mode) in SLOW else (n, m, mode)
+    for n, m in PAPER_KERNELS for mode in ("bandmap", "busmap")
+]
+
+
+@pytest.mark.parametrize("n,m,mode", BIT_CASES)
+def test_recorder_bit_identity_on_paper_kernels(n, m, mode):
+    """record=None and a live FlightRecorder must produce the identical
+    mapping — recording never touches the RNG stream or search state."""
+    kw = dict(mode=mode, seed=0)
+    base = map_dfg(make_cnkm(n, m), CGRAConfig(), **kw)
+    rec = FlightRecorder()
+    recorded = map_dfg(make_cnkm(n, m), CGRAConfig(), record=rec, **kw)
+    label = f"{cnkm_name(n, m)}:{mode}"
+    assert (base.ok, base.ii, base.n_routing_pes, base.attempts) == \
+        (recorded.ok, recorded.ii, recorded.n_routing_pes,
+         recorded.attempts), label
+    assert base.mis_size == recorded.mis_size, label
+    # And the recorded run actually saw the pipeline.
+    kinds = {e["kind"] for e in rec.dump()}
+    assert "phase-begin" in kinds and "attempt" in kinds, label
+    assert kinds <= set(EVENTS), kinds - set(EVENTS)

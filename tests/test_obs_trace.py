@@ -229,18 +229,44 @@ def test_gauge_tracks_last_min_max_mean():
     assert g == dict(last=5, min=1, max=5, count=5, mean=2.8)
 
 
-def test_snapshot_reset_is_atomic_clear():
+def test_snapshot_reset_drains_window_keeps_lifetime():
     reg = MetricsRegistry()
     reg.inc("portfolio.iters", 10)
     reg.observe("latency_s", 0.5)
     reg.gauge("queue_depth", 3)
     snap = reg.snapshot(reset=True)
     assert snap["counters"]["portfolio.iters"] == 10
-    after = reg.snapshot()
-    assert after == dict(counters={}, gauges={}, histograms={})
-    # The registry keeps working after a reset.
+    # A second drain sees an empty *window*...
+    again = reg.snapshot(reset=True)
+    assert again == dict(counters={}, gauges={}, histograms={})
+    # ...but the cumulative default view keeps the lifetime totals: a
+    # scraping consumer can never zero another reader's view (the
+    # double-drain hazard).
+    life = reg.snapshot()
+    assert life["counters"]["portfolio.iters"] == 10
+    assert life["histograms"]["latency_s"]["count"] == 1
+    assert life["gauges"]["queue_depth"]["last"] == 3
+    # Counters keep accumulating across the drain boundary, and the
+    # lifetime reads fold both sides.
     reg.inc("portfolio.iters", 2)
-    assert reg.counter_value("portfolio.iters") == 2
+    assert reg.counter_value("portfolio.iters") == 12
+    assert reg.snapshot(reset=True)["counters"]["portfolio.iters"] == 2
+    assert reg.snapshot()["counters"]["portfolio.iters"] == 12
+
+
+def test_drained_gauge_envelope_and_percentiles_fold():
+    reg = MetricsRegistry()
+    reg.gauge("queue_depth", 9)
+    for v in (0.1, 0.2):
+        reg.observe("latency_s", v)
+    reg.snapshot(reset=True)
+    reg.gauge("queue_depth", 2)
+    reg.observe("latency_s", 0.4)
+    g = reg.snapshot()["gauges"]["queue_depth"]
+    # Live window's last wins; envelope spans both windows.
+    assert (g["last"], g["min"], g["max"], g["count"]) == (2, 2, 9, 2)
+    p50, _, _ = reg.percentiles("latency_s")
+    assert p50 == pytest.approx(0.2)
 
 
 def test_concurrent_counter_increments_lossless():

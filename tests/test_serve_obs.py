@@ -1,0 +1,181 @@
+"""Serve-tier observability: Prometheus exposition with labels, the
+per-request access log, the service flight recorder (admit / reject /
+crash stream), head-sampled tracing, and the worker crash path."""
+
+import pytest
+
+from repro.core import (CGRAConfig, make_cnkm, make_request_trace,
+                        permute_dfg)
+from repro.core.dfg import DFG, OpKind
+from repro.obs import ACCESS_LOG_FIELDS, parse_prometheus
+from repro.serve import MappingService, MapRequest
+
+CGRA = CGRAConfig()
+
+
+def _dense_vio(n: int = 8) -> DFG:
+    """Statically unmappable at max_ii=2 (demand floor > range)."""
+    d = DFG()
+    vins = [d.add_op(OpKind.VIN, f"v{i}") for i in range(n)]
+    for i in range(n - 1):
+        x = d.add_op(OpKind.COMPUTE, f"x{i}")
+        d.add_edge(vins[i], x)
+        d.add_edge(vins[i + 1], x)
+        o = d.add_op(OpKind.VOUT, f"o{i}")
+        d.add_edge(x, o)
+    return d
+
+
+# ------------------------------------------------------------ prometheus
+def test_prometheus_exposition_with_shard_label():
+    svc = MappingService(max_workers=2, shard="7")
+    trace = make_request_trace(10, scale="4x4", seed=3)
+    svc.map_batch([MapRequest(dfg=t.dfg, cgra=CGRA, deadline=t.deadline)
+                   for t in trace])
+    parsed = parse_prometheus(svc.prometheus())
+    labels = {"shard": "7"}
+    assert parsed["bandmap_requests"] == [(labels, 10.0)]
+    assert parsed["bandmap_queue_depth"] == [(labels, 10.0)]
+    hit_rate = parsed["bandmap_hit_rate"][0]
+    assert hit_rate[0] == labels and 0.0 <= hit_rate[1] <= 1.0
+    lat_qs = {lab["quantile"] for lab, _ in parsed["bandmap_latency_s"]}
+    assert lat_qs == {"0.5", "0.95", "0.99"}
+    # An explicit label set overrides the shard default.
+    parsed2 = parse_prometheus(svc.prometheus(labels={"worker": "a"}))
+    assert parsed2["bandmap_requests"] == [({"worker": "a"}, 10.0)]
+
+
+def test_prometheus_never_drains_the_registry():
+    svc = MappingService(max_workers=1)
+    svc.map(make_cnkm(2, 4), CGRA)
+    before = svc.metrics()["requests"]
+    svc.prometheus()
+    svc.prometheus()
+    assert svc.metrics()["requests"] == before == 1
+    # ...and a metrics scrape draining the window doesn't zero the
+    # exposition either (it renders the cumulative view).
+    svc.metrics(reset=True)
+    parsed = parse_prometheus(svc.prometheus())
+    assert parsed["bandmap_requests"][0][1] == 1.0
+
+
+@pytest.mark.slow
+def test_prometheus_over_200_request_serve_trace():
+    """Acceptance: a 200-request Zipf trace exposes hit-rate, p99
+    latency and the queue-depth gauge, labeled by shard."""
+    svc = MappingService(max_workers=4, shard="0")
+    trace = make_request_trace(200, scale="4x4", seed=11)
+    outs = svc.map_batch([
+        MapRequest(dfg=t.dfg, cgra=CGRA, deadline=t.deadline,
+                   options=dict(mis_restarts=4, mis_iters=4000),
+                   req_id=f"r{i}")
+        for i, t in enumerate(trace)])
+    assert len(outs) == 200
+    parsed = parse_prometheus(svc.prometheus())
+    labels = {"shard": "0"}
+    assert parsed["bandmap_requests"] == [(labels, 200.0)]
+    assert parsed["bandmap_hit_rate"][0][1] > 0.0     # Zipf head repeats
+    p99 = {lab["quantile"]: v
+           for lab, v in parsed["bandmap_latency_s"]}["0.99"]
+    assert p99 > 0.0
+    assert parsed["bandmap_latency_s_count"] == [(labels, 200.0)]
+    assert parsed["bandmap_queue_depth"] == [(labels, 200.0)]
+    assert len(svc.access_log) == 200
+
+
+# ------------------------------------------------------------ access log
+def test_every_request_gets_an_access_log_line():
+    svc = MappingService(max_workers=2)
+    base = make_cnkm(3, 6)
+    svc.map_batch([
+        MapRequest(dfg=base, cgra=CGRA, req_id="lead"),
+        MapRequest(dfg=permute_dfg(base, seed=1), cgra=CGRA,
+                   req_id="follow"),
+        MapRequest(dfg=_dense_vio(), cgra=CGRA,
+                   options=dict(max_ii=2), req_id="doomed"),
+    ])
+    entries = {e["req_id"]: e for e in svc.access_log.tail()}
+    assert set(entries) == {"lead", "follow", "doomed"}
+    assert all(tuple(e) == ACCESS_LOG_FIELDS
+               for e in entries.values())
+    assert entries["lead"]["source"] == "computed"
+    assert entries["lead"]["ok"] and not entries["lead"]["hit"]
+    assert entries["follow"]["source"] == "dedupe"
+    assert entries["doomed"]["source"] == "static_reject"
+    assert entries["doomed"]["backend"] == "static"
+    assert not entries["doomed"]["ok"]
+    assert all(e["wall_s"] >= 0 and len(e["digest"]) == 64
+               for e in entries.values())
+
+
+# -------------------------------------------------- flight / serve events
+def test_service_flight_records_admit_and_reject():
+    svc = MappingService(max_workers=1)
+    svc.map(make_cnkm(2, 4), CGRA, req_id="solo")
+    svc.map(_dense_vio(), CGRA, max_ii=2, req_id="doomed")
+    svc.map(permute_dfg(_dense_vio(), seed=7), CGRA, max_ii=2)
+    kinds = [e["kind"] for e in svc.flight.dump()]
+    assert "serve-admit" in kinds
+    assert kinds.count("serve-reject") == 2       # static + negative hit
+    reasons = {e["reason"] for e in svc.flight.dump()
+               if e["kind"] == "serve-reject"}
+    assert reasons == {"static", "negative-cache"}
+
+
+def test_worker_crash_yields_synthetic_failure(monkeypatch):
+    import repro.serve.scheduler as sched_mod
+
+    def boom(*a, **kw):
+        raise RuntimeError("injected crash")
+
+    monkeypatch.setattr(sched_mod, "map_dfg", boom)
+    svc = MappingService(max_workers=2)
+    base = make_cnkm(2, 6)
+    outs = svc.map_batch([
+        MapRequest(dfg=base, cgra=CGRA, req_id="lead"),
+        MapRequest(dfg=permute_dfg(base, seed=1), cgra=CGRA,
+                   req_id="follow"),
+    ])
+    assert all(o.source == "crash" and not o.ok for o in outs)
+    res = outs[0].result
+    # The synthetic result fails the cache's sound-negative admission
+    # rule by construction: a crash is never stored as a proof.
+    assert res.attempts == 1 and not res.proved_infeasible
+    assert not res.certificates
+    assert svc.cache.stats.puts == 0
+    # The per-request postmortem ends in the crash event...
+    assert res.flight[-1]["kind"] == "serve-crash"
+    assert res.flight[-1]["error"] == "RuntimeError"
+    # ...and the service-level stream saw it too.
+    assert any(e["kind"] == "serve-crash" for e in svc.flight.dump())
+    # Access log labels both requests as crash outcomes.
+    assert {e["source"] for e in svc.access_log.tail()} == {"crash"}
+    # A retry after the bug is fixed gets a fresh (uncached) run.
+    monkeypatch.undo()
+    out = svc.map(base, CGRA)
+    assert not out.hit and out.ok
+
+
+# -------------------------------------------------------------- sampling
+def test_head_sampling_bit_identity_and_capture():
+    trace = make_request_trace(8, scale="4x4", seed=5)
+    reqs = lambda: [MapRequest(dfg=t.dfg, cgra=CGRA, req_id=f"r{i}")  # noqa: E731
+                    for i, t in enumerate(trace)]
+    plain = MappingService(max_workers=2).map_batch(reqs())
+    sampled_svc = MappingService(max_workers=2, trace_sample=1.0)
+    sampled = sampled_svc.map_batch(reqs())
+    for a, b in zip(plain, sampled):
+        assert (a.ok, a.result.ii, a.result.n_routing_pes,
+                a.result.attempts, a.result.mis_size) == \
+            (b.ok, b.result.ii, b.result.n_routing_pes,
+             b.result.attempts, b.result.mis_size)
+    # rate=1.0 traces every *dispatched* request (hits never dispatch).
+    n_computed = sum(1 for o in sampled if o.source == "computed")
+    assert len(sampled_svc.traces) == n_computed > 0
+    digest, tracer = sampled_svc.traces[0]
+    assert len(digest) == 64
+    assert any(r.name == "map-dfg" for r in tracer.finished)
+    # rate=0.0 (default) samples nothing.
+    zero_svc = MappingService(max_workers=2)
+    zero_svc.map_batch(reqs())
+    assert len(zero_svc.traces) == 0

@@ -280,14 +280,20 @@ def test_metrics_p99_queue_depth_and_reset():
     reg = MetricsRegistry()
     assert MappingService(registry=reg).registry is reg
 
-    # reset=True drains the counter window...
+    # reset=True drains the interval window...
     drained = svc.metrics(reset=True)
     assert drained["requests"] == 10
+    # ...while the default (lifetime) view survives the drain — a
+    # scraping consumer cannot zero `summary()`'s numbers.
     after = svc.metrics()
-    assert after["requests"] == 0 and after["p99_ms"] == 0
-    # ...but not the mapping cache: a repeat batch still hits.
+    assert after["requests"] == 10
+    assert "10 requests" in svc.summary()
+    # The mapping cache is untouched by a metrics drain: a repeat
+    # batch still hits, and the next interval window reports it.
     outs = svc.map_batch([MapRequest(dfg=t.dfg, cgra=CGRA,
                                      deadline=t.deadline)
                           for t in trace])
     assert all(o.hit for o in outs)
-    assert svc.metrics()["hit_rate"] == 1.0
+    window = svc.metrics(reset=True)
+    assert window["requests"] == 10 and window["hit_rate"] == 1.0
+    assert svc.metrics()["requests"] == 20
